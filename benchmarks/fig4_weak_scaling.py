@@ -1,0 +1,83 @@
+"""Paper Fig. 4: weak scaling of DrJAX local SGD.
+
+The paper's claim: with partition size and devices scaled together (fixed
+per-group work), round time stays ~constant. Wall-clock on one CPU core
+cannot show this, so we measure the quantity that *determines* it on a real
+cluster: per-device HLO FLOPs and per-device peak memory from the compiled
+SPMD program, at n = devices ∈ {1, 2, 4, 8} with fixed per-group work.
+Flat per-device FLOPs/memory ⇒ constant round time on hardware that provides
+the devices (plus the synchronization overhead the paper also notes).
+"""
+
+from __future__ import annotations
+
+from . import _util
+
+
+def run():
+    rows = []
+    for n in (1, 2, 4, 8):
+        res = _util.run_point(
+            _util.LOCAL_SGD_SNIPPET + """
+round_cfg = LocalSGDConfig(
+    partition_size=N, num_local_steps=LOCAL_STEPS,
+    partition_axes=part_axes, mesh=mesh,
+)
+round_fn = make_local_sgd_round(
+    loss_fn, optim.sgd(0.05), optim.fedavg_momentum(1.0), round_cfg)
+sstate = optim.fedavg_momentum(1.0).init(params)
+data = {{
+    "tokens": jnp.zeros((N, LOCAL_STEPS, B, S), jnp.int32),
+    "labels": jnp.zeros((N, LOCAL_STEPS, B, S), jnp.int32),
+}}
+t0 = time.time()
+lowered = jax.jit(round_fn).lower(params, sstate, data)
+compiled = lowered.compile()
+compile_s = time.time() - t0
+cost = compiled.cost_analysis()
+mem = compiled.memory_analysis()
+# wall-clock for one round (all devices emulated on one core: total work)
+import numpy as _np
+args = jax.device_put((params, sstate, data))
+out = compiled(*jax.tree_util.tree_leaves((params, sstate, data))) if False else None
+t0 = time.time()
+r = jax.jit(round_fn)(params, sstate, data)
+jax.block_until_ready(r[2]["loss"])
+wall_s = time.time() - t0
+print(json.dumps({{
+    "n": N, "devices": DEVICES,
+    "flops_per_device": cost.get("flops", 0.0),
+    "temp_bytes_per_device": mem.temp_size_in_bytes,
+    "compile_s": compile_s,
+    "wall_s_total_work": wall_s,
+}}))
+""",
+            devices=n,
+            partition=n,
+        )
+        rows.append(res)
+    base = rows[0]["flops_per_device"] or 1.0
+    out = []
+    for r in rows:
+        out.append({
+            "name": f"fig4_weak_scaling_n{r['n']}",
+            "us_per_call": round(r["wall_s_total_work"] * 1e6, 1),
+            "derived": (
+                f"flops/device={r['flops_per_device']:.3e};"
+                f"rel_to_n1={r['flops_per_device']/base:.3f};"
+                f"temp_bytes/device={r['temp_bytes_per_device']}"
+            ),
+        })
+    # headline: per-device flops stay flat (weak scaling)
+    rel = rows[-1]["flops_per_device"] / base
+    out.append({
+        "name": "fig4_weak_scaling_flatness",
+        "us_per_call": 0.0,
+        "derived": f"flops_per_device_n8_over_n1={rel:.3f} (1.0 == ideal)",
+    })
+    return out
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

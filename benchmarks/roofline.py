@@ -1,0 +1,58 @@
+"""Roofline table: aggregates the dry-run results (launch/dryrun.py) into
+the per-(arch × shape × mesh) three-term roofline rows for EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "dryrun_results")
+
+
+def load_results():
+    rows = []
+    if not os.path.isdir(RESULTS_DIR):
+        return rows
+    for name in sorted(os.listdir(RESULTS_DIR)):
+        if name.endswith(".json"):
+            with open(os.path.join(RESULTS_DIR, name)) as f:
+                rows.append(json.load(f))
+    return rows
+
+
+def run():
+    out = []
+    for r in load_results():
+        name = f"roofline_{r['arch']}_{r['cell']}_{r['mesh']}"
+        if r.get("algorithm", "sgd") != "sgd":
+            name += f"_{r['algorithm']}"
+        if r["status"] == "skipped":
+            out.append({"name": name, "us_per_call": 0.0,
+                        "derived": f"SKIPPED: {r['reason']}"})
+            continue
+        if r["status"] != "ok":
+            out.append({"name": name, "us_per_call": 0.0,
+                        "derived": f"ERROR: {r.get('error', '?')[:120]}"})
+            continue
+        rf = r["roofline"]
+        out.append({
+            "name": name,
+            "us_per_call": round(rf["step_time_lower_bound_s"] * 1e6, 1),
+            "derived": (
+                f"compute_s={rf['compute_s']:.4g};memory_s={rf['memory_s']:.4g};"
+                f"collective_s={rf['collective_s']:.4g};dom={rf['dominant']};"
+                f"mfu_overlap={rf.get('mfu_overlap', 0):.3f};"
+                f"useful_ratio={rf['useful_flops_ratio']:.3f};"
+                f"peakHBM_GiB={r['memory']['peak_hbm_bytes']/2**30:.1f}"
+            ),
+        })
+    if not out:
+        out.append({"name": "roofline_missing", "us_per_call": 0.0,
+                    "derived": "run scripts/dryrun_sweep.sh first"})
+    return out
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

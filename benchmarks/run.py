@@ -1,0 +1,56 @@
+"""Benchmark runner: one module per paper table/figure + roofline extraction.
+
+Prints ``name,us_per_call,derived`` CSV. Figures 4/5/6 spawn subprocesses
+with varying fake-device counts; the roofline rows read the dry-run result
+cache (run ``scripts/dryrun_sweep.sh`` first for the full 40-cell table).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+BENCHES = (
+    ("table1", "benchmarks.table1_flops"),
+    ("micro", "benchmarks.primitives_micro"),
+    ("fig4", "benchmarks.fig4_weak_scaling"),
+    ("fig5", "benchmarks.fig5_forloop"),
+    ("fig6", "benchmarks.fig6_sharding_ablation"),
+    ("roofline", "benchmarks.roofline"),
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: "
+                         + ",".join(k for k, _ in BENCHES))
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, modname in BENCHES:
+        if only and key not in only:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            for row in mod.run():
+                derived = str(row["derived"]).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']},{derived}",
+                      flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{key},0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Parallel MAML on a real (small) transformer via MapReduce AD.
+
+Meta-learns an initialization across synthetic "task domains" (group-skewed
+token distributions): each task adapts with one inner SGD step on its support
+batch; the outer loss is the post-adaptation query loss, averaged with
+``drjax.reduce_mean``. ``jax.grad`` of the whole thing is again a DrJAX
+program (paper Snippet 7).
+
+Run:  PYTHONPATH=src python examples/parallel_maml.py
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import core as drjax
+from repro.algorithms.maml import make_parallel_maml
+from repro.data.grouped import GroupedCorpus, CohortSampler
+from repro.models import registry
+
+N_TASKS = 4
+INNER_LR = 0.05
+OUTER_LR = 0.2
+STEPS = 30
+
+
+def main():
+    cfg = registry.get_config("lm_350m").reduced()
+    loss_fn = functools.partial(registry.loss_fn, cfg)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+
+    corpus = GroupedCorpus(vocab_size=cfg.vocab_size, num_groups=N_TASKS * 4)
+    sampler = CohortSampler(corpus, cohort_size=N_TASKS)
+
+    maml_loss, train_step = make_parallel_maml(
+        loss_fn, partition_size=N_TASKS, inner_lr=INNER_LR, inner_steps=1
+    )
+    step = jax.jit(functools.partial(train_step, outer_lr=OUTER_LR))
+
+    def tasks_for(round_idx):
+        d = sampler.round_batch(round_idx, 2, 2, 32)  # 2 local batches/task
+        return {
+            "support": {"tokens": d["tokens"][:, 0], "labels": d["labels"][:, 0]},
+            "query": {"tokens": d["tokens"][:, 1], "labels": d["labels"][:, 1]},
+        }
+
+    t0 = tasks_for(0)
+    print(f"initial meta-loss: {maml_loss(params, t0):.4f}")
+    for r in range(STEPS):
+        params, loss = step(params, tasks_for(r))
+        if r % 5 == 0:
+            print(f"round {r:3d}  meta-loss {float(loss):.4f}")
+    print(f"final meta-loss:   {maml_loss(params, t0):.4f}")
+
+    # show the MapReduce structure of the *gradient* program
+    gx = jax.make_jaxpr(jax.grad(maml_loss))(params, t0)
+    counts = drjax.count_primitives(gx)
+    print("gradient-program primitives:", counts)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Recompute the analytic roofline fields of cached dry-run results
+(the compiled HLO evidence is untouched; only the model-derived terms are
+refreshed when the analytic model changes)."""
+import json, glob, os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+from repro.launch import analytic
+from repro.models import registry
+
+for f in sorted(glob.glob(os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "benchmarks/dryrun_results/*.json"))):
+    r = json.load(open(f))
+    if r["status"] != "ok":
+        continue
+    cfg = registry.get_config(r["arch"])
+    shape = registry.SHAPE_CELLS[r["cell"]]
+    mesh = (analytic.MeshModel.multi() if r["mesh"] == "multi"
+            else analytic.MeshModel.single())
+    ana = analytic.analytic_roofline(
+        cfg, shape["kind"], shape["global_batch"], shape["seq_len"], mesh)
+    r["roofline"] = {k: (round(v, 6) if isinstance(v, float) else v)
+                     for k, v in ana.items() if k != "collective_breakdown"}
+    r["collective_breakdown"] = {
+        k: round(v, 1) for k, v in ana["collective_breakdown"].items()}
+    json.dump(r, open(f, "w"), indent=1)
+print("refreshed")

@@ -1,0 +1,156 @@
+"""MapReduce training rounds: local SGD / FedAvg / DiLoCo / FedSGD.
+
+This is the paper's §4 workload, built verbatim from the building blocks:
+
+    params_b = drjax.broadcast(global_params)           # server -> groups
+    deltas   = drjax.map_fn(client_update, (params_b, round_data))
+    delta    = drjax.reduce_mean(deltas)                # groups -> server
+    params   = server_opt(global_params, delta)
+
+``client_update`` runs ``num_local_steps`` optimizer steps on the group's
+batches — model- and optimizer-agnostic (any ``loss_fn(params, batch)``).
+Distribution: the partition axis shards over (pod, data); everything inside
+``map_fn`` additionally uses the model's logical-axis annotations, so model
+parallelism composes (paper: "shard computations over data partitions,
+model, and within-data partitions simultaneously").
+
+Options beyond the paper's baseline (all recorded in EXPERIMENTS.md §Perf):
+ * straggler masks (over-provisioned cohorts, masked reduction);
+ * delta compression (int8 with error-feedback) before the reduction;
+ * weighted (FedAvg) and self-tuned (learned-weight) reductions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import core as drjax
+from repro.compression import api as compression
+from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSGDConfig:
+    partition_size: int
+    num_local_steps: int = 4
+    partition_axes: Any = None  # e.g. ("pod", "data") on the production mesh
+    mesh: Any = None
+    use_sharding_annotations: bool = True
+    grad_clip: float = 0.0
+    compression: Optional[str] = None  # None | "int8" | "topk"
+    topk_fraction: float = 0.01
+    straggler_mask: bool = False
+
+
+def _tree_sub(a, b):
+    return jax.tree_util.tree_map(
+        lambda x, y: (x.astype(jnp.float32) - y.astype(jnp.float32)), a, b
+    )
+
+
+def make_local_sgd_round(
+    loss_fn: Callable,
+    client_opt: Optimizer,
+    server_opt: Optimizer,
+    cfg: LocalSGDConfig,
+):
+    """Returns round_fn(global_params, server_state, round_data[, mask]).
+
+    ``round_data`` leaves have shape (n, num_local_steps, ...per-step batch).
+    Returns (new_params, new_server_state, metrics).
+    """
+
+    def client_update(params0, client_data):
+        opt_state = client_opt.init(params0)
+
+        def one_step(carry, batch):
+            params, opt_state = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            if cfg.grad_clip:
+                grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+            updates, opt_state = client_opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return (params, opt_state), loss
+
+        (params_new, _), losses = jax.lax.scan(
+            one_step, (params0, opt_state), client_data
+        )
+        delta = _tree_sub(params_new, params0)
+        if cfg.compression == "int8":
+            delta = compression.int8_roundtrip(delta)
+        elif cfg.compression == "topk":
+            delta = compression.topk_sparsify(delta, cfg.topk_fraction)
+        return delta, jnp.mean(losses)
+
+    @drjax.program(
+        partition_size=cfg.partition_size,
+        partition_axes=cfg.partition_axes,
+        mesh=cfg.mesh,
+        use_sharding_annotations=cfg.use_sharding_annotations,
+    )
+    def round_fn(global_params, server_state, round_data, mask=None):
+        params_b = drjax.broadcast(global_params)
+        deltas, losses = drjax.map_fn(client_update, (params_b, round_data))
+        if cfg.straggler_mask and mask is not None:
+            mean_delta = drjax.masked_reduce_mean(deltas, mask)
+            mean_loss = drjax.masked_reduce_mean(losses, mask)
+        else:
+            mean_delta = drjax.reduce_mean(deltas)
+            mean_loss = drjax.reduce_mean(losses)
+        updates, new_server_state = server_opt.update(
+            mean_delta, server_state, global_params
+        )
+        new_params = apply_updates(global_params, updates)
+        metrics = {"loss": mean_loss}
+        return new_params, new_server_state, metrics
+
+    return round_fn
+
+
+def make_fedsgd_round(
+    loss_fn: Callable,
+    server_opt: Optimizer,
+    cfg: LocalSGDConfig,
+    *,
+    learned_weights: bool = False,
+):
+    """Single-local-step gradient averaging (FedSGD).
+
+    With ``learned_weights=True`` the reduction weights are a trainable
+    input — the self-tuning reduction of paper §6 (gradients flow to the
+    weights through MapReduce AD).
+    """
+
+    def client_grad(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return grads, loss
+
+    @drjax.program(
+        partition_size=cfg.partition_size,
+        partition_axes=cfg.partition_axes,
+        mesh=cfg.mesh,
+        use_sharding_annotations=cfg.use_sharding_annotations,
+    )
+    def round_fn(global_params, server_state, batches, weights=None):
+        params_b = drjax.broadcast(global_params)
+        grads, losses = drjax.map_fn(client_grad, (params_b, batches))
+        if learned_weights and weights is not None:
+            w = jax.nn.softmax(weights) * cfg.partition_size
+            mean_grad = drjax.reduce_weighted_mean(grads, w)
+            mean_loss = drjax.reduce_weighted_mean(losses, w)
+        else:
+            mean_grad = drjax.reduce_mean(grads)
+            mean_loss = drjax.reduce_mean(losses)
+        neg = jax.tree_util.tree_map(lambda g: -g, mean_grad)
+        updates, new_server_state = server_opt.update(
+            neg, server_state, global_params
+        )
+        new_params = apply_updates(global_params, updates)
+        return new_params, new_server_state, {"loss": mean_loss}
+
+    return round_fn

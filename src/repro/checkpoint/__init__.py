@@ -1,0 +1,5 @@
+"""Checkpointing: sharded npz + manifest, async writes, auto-resume."""
+
+from .manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

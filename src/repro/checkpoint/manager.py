@@ -1,0 +1,193 @@
+"""Checkpoint manager: atomic, hashed, async, restart-safe.
+
+Layout per step::
+
+    <dir>/step_000123/
+        manifest.json     # tree structure, shapes, dtypes, per-array sha256,
+                          # user metadata (data-iterator state, rng, mesh)
+        arrays.npz        # flattened leaves keyed by leaf index
+    <dir>/LATEST          # atomic pointer file (rename barrier)
+
+Guarantees:
+ * atomicity — a checkpoint becomes visible only after its directory is
+   complete (LATEST is updated last via os.replace);
+ * integrity — every array carries a sha256; restore verifies;
+ * async — ``save(..., blocking=False)`` hands the host copy to a writer
+   thread, training continues (one outstanding write, back-pressure on the
+   next save);
+ * retention — ``keep_last_n`` garbage-collects old steps;
+ * auto-resume — ``restore_latest()`` picks the newest complete checkpoint,
+   skipping torn ones.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_key(i: int) -> str:
+    return f"leaf_{i:05d}"
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last_n: int = 3):
+        self.directory = directory
+        self.keep_last_n = keep_last_n
+        os.makedirs(directory, exist_ok=True)
+        self._writer: Optional[threading.Thread] = None
+        self._write_error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    # save
+    # ------------------------------------------------------------------
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:09d}")
+
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None,
+             blocking: bool = True) -> None:
+        self.wait()  # back-pressure: one outstanding async write
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        host_leaves = []
+        leaf_dtypes = []
+        for l in leaves:
+            a = np.asarray(l)  # device->host copy now
+            leaf_dtypes.append(str(a.dtype))
+            if a.dtype.name == "bfloat16":  # npz can't store ml_dtypes
+                a = a.view(np.uint16)
+            host_leaves.append(a)
+        treedef_repr = str(treedef)
+
+        def _write():
+            try:
+                tmp = self._step_dir(step) + ".tmp"
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                os.makedirs(tmp)
+                arrays = {_leaf_key(i): l for i, l in enumerate(host_leaves)}
+                np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+                manifest = {
+                    "step": step,
+                    "treedef": treedef_repr,
+                    "num_leaves": len(host_leaves),
+                    "leaves": [
+                        {
+                            "shape": list(l.shape),
+                            "dtype": dt,
+                            "sha256": hashlib.sha256(
+                                np.ascontiguousarray(l).tobytes()
+                            ).hexdigest(),
+                        }
+                        for l, dt in zip(host_leaves, leaf_dtypes)
+                    ],
+                    "metadata": metadata or {},
+                }
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                final = self._step_dir(step)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.replace(tmp, final)
+                # atomic LATEST pointer
+                ptr_tmp = os.path.join(self.directory, ".LATEST.tmp")
+                with open(ptr_tmp, "w") as f:
+                    f.write(os.path.basename(final))
+                os.replace(ptr_tmp, os.path.join(self.directory, "LATEST"))
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._write_error = e
+
+        if blocking:
+            _write()
+            self._raise_pending()
+        else:
+            self._writer = threading.Thread(target=_write, daemon=True)
+            self._writer.start()
+
+    def wait(self) -> None:
+        if self._writer is not None:
+            self._writer.join()
+            self._writer = None
+        self._raise_pending()
+
+    def _raise_pending(self):
+        if self._write_error is not None:
+            e, self._write_error = self._write_error, None
+            raise RuntimeError("async checkpoint write failed") from e
+
+    def _gc(self) -> None:
+        steps = sorted(self._complete_steps())
+        for s in steps[: -self.keep_last_n]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    # restore
+    # ------------------------------------------------------------------
+
+    def _complete_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if not name.startswith("step_") or name.endswith(".tmp"):
+                continue
+            if os.path.exists(
+                os.path.join(self.directory, name, "manifest.json")
+            ):
+                out.append(int(name.split("_")[1]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self._complete_steps()
+        return max(steps) if steps else None
+
+    def restore(self, step: int, example_tree: Any,
+                verify: bool = True) -> Tuple[Any, dict]:
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        leaves = []
+        for i in range(manifest["num_leaves"]):
+            a = data[_leaf_key(i)]
+            spec_dtype = manifest["leaves"][i]["dtype"]
+            if spec_dtype == "bfloat16" and a.dtype == np.uint16:
+                import ml_dtypes
+                a = a.view(ml_dtypes.bfloat16)
+            leaves.append(a)
+        if verify:
+            for l, spec in zip(leaves, manifest["leaves"]):
+                h = hashlib.sha256(np.ascontiguousarray(l).tobytes()).hexdigest()
+                if h != spec["sha256"]:
+                    raise IOError(
+                        f"checkpoint corruption at step {step}: hash mismatch"
+                    )
+        _, treedef = jax.tree_util.tree_flatten(example_tree)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        # cast to the example's dtypes (bf16 params round-trip via npz as-is)
+        tree = jax.tree_util.tree_map(
+            lambda ex, l: np.asarray(l).astype(ex.dtype)
+            if hasattr(ex, "dtype")
+            else l,
+            example_tree,
+            tree,
+        )
+        return tree, manifest["metadata"]
+
+    def restore_latest(self, example_tree: Any,
+                       verify: bool = True) -> Optional[Tuple[int, Any, dict]]:
+        self.wait()
+        steps = sorted(self._complete_steps(), reverse=True)
+        for s in steps:
+            try:
+                tree, meta = self.restore(s, example_tree, verify=verify)
+                return s, tree, meta
+            except (IOError, KeyError, json.JSONDecodeError):
+                continue  # torn/corrupt checkpoint: fall back to previous
+        return None

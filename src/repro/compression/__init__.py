@@ -1,0 +1,5 @@
+"""Delta/gradient compression for the reduce path."""
+
+from .api import int8_roundtrip, topk_sparsify, ErrorFeedback
+
+__all__ = ["int8_roundtrip", "topk_sparsify", "ErrorFeedback"]

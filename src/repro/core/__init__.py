@@ -1,0 +1,78 @@
+"""DrJAX core: differentiable MapReduce primitives for JAX.
+
+Usage mirrors the paper:
+
+.. code-block:: python
+
+    from repro import core as drjax
+
+    @drjax.program(partition_size=3)
+    def f(x):
+        y = drjax.broadcast(x)
+        z = drjax.map_fn(lambda a: 2 * a, y)
+        return drjax.reduce_sum(z)
+"""
+
+from .api import (
+    broadcast,
+    map_fn,
+    masked_reduce_mean,
+    partition_size,
+    placement_context,
+    program,
+    reduce_max,
+    reduce_mean,
+    reduce_sum,
+    reduce_weighted_mean,
+    current_context,
+)
+from .hierarchical import cross_pod_bytes, hierarchical_reduce_mean
+from .interpreter import (
+    MapReducePlan,
+    build_plan,
+    count_primitives,
+    run_plan,
+    trace,
+)
+from .placement import PlacementContext, make_context
+from .primitives import (
+    COMMUNICATION_PRIMITIVES,
+    DRJAX_PRIMITIVES,
+    broadcast_p,
+    reduce_max_p,
+    reduce_mean_p,
+    reduce_sum_p,
+)
+from .sharding import constrain_partitioned, constrain_replicated, partition_spec
+
+__all__ = [
+    "broadcast",
+    "map_fn",
+    "masked_reduce_mean",
+    "partition_size",
+    "placement_context",
+    "program",
+    "reduce_max",
+    "reduce_mean",
+    "reduce_sum",
+    "reduce_weighted_mean",
+    "current_context",
+    "hierarchical_reduce_mean",
+    "cross_pod_bytes",
+    "MapReducePlan",
+    "build_plan",
+    "count_primitives",
+    "run_plan",
+    "trace",
+    "PlacementContext",
+    "make_context",
+    "COMMUNICATION_PRIMITIVES",
+    "DRJAX_PRIMITIVES",
+    "broadcast_p",
+    "reduce_max_p",
+    "reduce_mean_p",
+    "reduce_sum_p",
+    "constrain_partitioned",
+    "constrain_replicated",
+    "partition_spec",
+]

@@ -1,0 +1,116 @@
+"""Placement context for DrJAX programs.
+
+A *placement* names a logical partition (e.g. ``"clients"``) and carries its
+cardinality (the number of groups). DrJAX decouples this logical cardinality
+from physical devices: a partition of size ``n`` may be sharded over any ``m``
+devices with ``m | n`` (paper §3, "Sharding DrJAX computations").
+
+The context also carries the *mesh axes* that the partition's leading array
+axis should be sharded over, and whether sharding annotations are installed at
+all (``use_sharding_annotations=False`` reproduces the paper's DrJAX-NS
+ablation, Fig. 6).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+
+AxisSpec = Union[str, Tuple[str, ...], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementContext:
+    """Ambient configuration for DrJAX primitives.
+
+    Attributes:
+      placement: logical name of the partition ("clients" by default — the
+        paper's federated heritage — but any name works).
+      partition_size: number of groups n in the partition.
+      partition_axes: mesh axis name(s) the leading (partition) array axis is
+        sharded over, e.g. ``"data"`` or ``("pod", "data")``. ``None`` means
+        no sharding constraint is emitted (DrJAX-NS).
+      mesh: optional concrete mesh. If ``None``, sharding constraints use the
+        ambient mesh (``jax.sharding.use_mesh`` / ``with mesh:``).
+      use_sharding_annotations: master switch for static + dynamic sharding
+        annotations. ``False`` == DrJAX-NS (paper Fig. 6 ablation).
+      use_spmd_axis_name: whether ``map_fn`` passes ``spmd_axis_name`` to
+        ``jax.vmap`` (the *dynamic* sharding annotations on intermediates).
+    """
+
+    placement: str = "clients"
+    partition_size: int = 1
+    partition_axes: AxisSpec = None
+    mesh: Optional[jax.sharding.Mesh] = None
+    use_sharding_annotations: bool = True
+    use_spmd_axis_name: bool = True
+
+    def axes_tuple(self) -> Tuple[str, ...]:
+        if self.partition_axes is None:
+            return ()
+        if isinstance(self.partition_axes, str):
+            return (self.partition_axes,)
+        return tuple(self.partition_axes)
+
+    def spmd_axis_name(self):
+        axes = self.axes_tuple()
+        if not axes or not self.use_sharding_annotations or not self.use_spmd_axis_name:
+            return None
+        # jax.vmap accepts a single name or a tuple of names.
+        return axes if len(axes) > 1 else axes[0]
+
+
+class _ContextStack(threading.local):
+    def __init__(self):
+        super().__init__()
+        self.stack = []
+
+
+_CTX = _ContextStack()
+
+
+def current_context() -> PlacementContext:
+    if not _CTX.stack:
+        raise RuntimeError(
+            "No DrJAX placement context active. Wrap your computation with "
+            "@drjax.program(partition_size=...) or `with placement_context(...)`."
+        )
+    return _CTX.stack[-1]
+
+
+def has_context() -> bool:
+    return bool(_CTX.stack)
+
+
+@contextlib.contextmanager
+def placement_context(ctx: PlacementContext):
+    _CTX.stack.append(ctx)
+    try:
+        yield ctx
+    finally:
+        _CTX.stack.pop()
+
+
+def make_context(
+    partition_size: int,
+    *,
+    placement: str = "clients",
+    partition_axes: AxisSpec = "data",
+    mesh: Optional[jax.sharding.Mesh] = None,
+    use_sharding_annotations: bool = True,
+    use_spmd_axis_name: bool = True,
+) -> PlacementContext:
+    if partition_size < 1:
+        raise ValueError(f"partition_size must be >= 1, got {partition_size}")
+    return PlacementContext(
+        placement=placement,
+        partition_size=partition_size,
+        partition_axes=partition_axes,
+        mesh=mesh,
+        use_sharding_annotations=use_sharding_annotations,
+        use_spmd_axis_name=use_spmd_axis_name,
+    )

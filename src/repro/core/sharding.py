@@ -1,0 +1,71 @@
+"""Sharding annotations for DrJAX values.
+
+The paper's key systems finding (Fig. 6) is that *explicit* sharding
+annotations on the partitioned values — installed by the primitives themselves
+— are required for GSPMD to produce weak-scaling code. This module centralizes
+those annotations.
+
+Partitioned values are arrays with a leading "group" axis (paper Fig. 1). We
+shard that leading axis over the mesh axes named in the placement context
+(e.g. ``("pod", "data")`` on the production mesh) and leave the remaining axes
+unconstrained so GSPMD can propagate model-parallel shardings from the
+parameters through the mapped computation.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import placement as placement_lib
+
+
+_U = P.UNCONSTRAINED
+
+
+def partition_spec(ctx: placement_lib.PlacementContext, ndim: int) -> Optional[P]:
+    """PartitionSpec sharding the leading (partition) axis of an ndim array.
+
+    Only the partition axis is pinned; trailing dims stay UNCONSTRAINED so
+    GSPMD can propagate model-parallel shardings through the mapped
+    computation (the paper's composition of partition-, model- and
+    within-partition parallelism)."""
+    axes = ctx.axes_tuple()
+    if not axes:
+        return None
+    leading = axes if len(axes) > 1 else axes[0]
+    return P(leading, *([_U] * (ndim - 1)))
+
+
+def constrain_partitioned(x, ctx: placement_lib.PlacementContext):
+    """Apply the static sharding annotation to a partitioned array (leaf)."""
+    if not ctx.use_sharding_annotations:
+        return x
+    if ctx.mesh is None:
+        return x
+    if x.ndim == 0:
+        return x
+    spec = partition_spec(ctx, x.ndim)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def constrain_replicated(x, ctx: placement_lib.PlacementContext):
+    """Annotate a non-partitioned (server/singleton) array: replicated over
+    the partition axes, open elsewhere (GSPMD may keep it model-sharded)."""
+    if not ctx.use_sharding_annotations or ctx.mesh is None:
+        return x
+    axes = ctx.axes_tuple()
+    if not axes or x.ndim == 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*([_U] * x.ndim)))
+    )
+
+
+def constrain_tree(tree, ctx: placement_lib.PlacementContext, *, partitioned: bool):
+    f = constrain_partitioned if partitioned else constrain_replicated
+    return jax.tree_util.tree_map(lambda x: f(x, ctx), tree)

@@ -1,0 +1,11 @@
+"""Group-partitioned data pipeline (Dataset-Grouper-style)."""
+
+from .grouped import GroupedCorpus, CohortSampler
+from .synthetic import synthetic_lm_batch, SyntheticLMStream
+
+__all__ = [
+    "GroupedCorpus",
+    "CohortSampler",
+    "synthetic_lm_batch",
+    "SyntheticLMStream",
+]

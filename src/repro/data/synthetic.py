@@ -1,0 +1,44 @@
+"""Flat (non-grouped) synthetic LM stream for plain data-parallel training."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def synthetic_lm_batch(step: int, batch: int, seq: int, vocab: int,
+                       seed: int = 0) -> dict:
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    toks = rng.integers(0, vocab, size=(batch, seq + 1), dtype=np.int64)
+    return {
+        "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+        "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+    }
+
+
+@dataclasses.dataclass
+class SyntheticLMStream:
+    batch: int
+    seq: int
+    vocab: int
+    seed: int = 0
+    step: int = 0
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        b = synthetic_lm_batch(self.step, self.batch, self.seq, self.vocab,
+                               self.seed)
+        self.step += 1
+        return b
+
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.seed}
+
+    def restore(self, state: dict) -> None:
+        self.step = int(state["step"])
+        self.seed = int(state["seed"])

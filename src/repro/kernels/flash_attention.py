@@ -1,0 +1,169 @@
+"""Pallas TPU flash attention (causal / local-window, GQA).
+
+TPU-native tiling: the (Sq, Skv) score matrix never leaves VMEM — the grid is
+``(batch, kv_heads, q_blocks, kv_blocks)`` with the kv-block dimension
+innermost; online-softmax accumulators (acc, m, l) live in VMEM scratch and
+persist across the innermost grid dimension (the standard TPU flash pattern).
+Fully-masked kv blocks beyond the causal diagonal (or outside the local
+window) are skipped with ``pl.when`` — compute cost matches the
+lower-triangular schedule.
+
+Block shapes are MXU-aligned (multiples of 128 on the contracting/lane dims
+when the head_dim allows). Layout: q (B, Hkv, G, Sq, hd); k/v (B, Hkv, Skv,
+hd) — G = query groups per kv head (GQA).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    causal: bool,
+    window: int,
+    scale: float,
+    q_block: int,
+    kv_block: int,
+    nk: int,
+    kv_len: int,
+):
+    i = pl.program_id(2)  # q block
+    j = pl.program_id(3)  # kv block (innermost, sequential)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = i * q_block
+    k_start = j * kv_block
+
+    # visibility of this (i, j) block pair
+    visible = True
+    if causal:
+        visible = k_start <= q_start + q_block - 1
+    if window and window > 0:
+        visible = jnp.logical_and(
+            visible, k_start + kv_block - 1 > q_start - window
+        )
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, qb, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (kb, hd)
+        v = v_ref[0, 0].astype(jnp.float32)  # (kb, hd)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (G, qb, kb)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 1)
+        ok = k_pos < kv_len
+        if causal:
+            ok = jnp.logical_and(ok, k_pos <= q_pos)
+        if window and window > 0:
+            ok = jnp.logical_and(ok, k_pos > q_pos - window)
+        s = jnp.where(ok[None], s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        m_ref[...] = m_new
+        l_ref[...] = l_prev * corr + p.sum(axis=-1)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (G, qb, hd)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_block: int = 512,
+    kv_block: int = 512,
+    interpret: bool = False,
+):
+    """q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd). Returns (B, Sq, Hq, hd)."""
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    pad_q = (-sq) % q_block
+    pad_k = (-skv) % kv_block
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    sqp, skvp = qp.shape[1], kp.shape[1]
+    nq, nk = sqp // q_block, skvp // kv_block
+
+    # (B, Hkv, G, S, hd) / (B, Hkv, S, hd)
+    qr = jnp.moveaxis(qp.reshape(b, sqp, hkv, g, hd), 1, 3)
+    kr = jnp.moveaxis(kp, 1, 2)
+    vr = jnp.moveaxis(vp, 1, 2)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal,
+        window=window,
+        scale=scale,
+        q_block=q_block,
+        kv_block=kv_block,
+        nk=nk,
+        kv_len=skv,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, g, q_block, hd), lambda b_, h, i, j: (b_, h, 0, i, 0)
+            ),
+            pl.BlockSpec((1, 1, kv_block, hd), lambda b_, h, i, j: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, kv_block, hd), lambda b_, h, i, j: (b_, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, q_block, hd), lambda b_, h, i, j: (b_, h, 0, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, sqp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, q_block, hd), jnp.float32),
+            pltpu.VMEM((g, q_block), jnp.float32),
+            pltpu.VMEM((g, q_block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sqp, hq, hd)
+    return out[:, :sq]

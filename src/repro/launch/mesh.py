@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches JAX device state — the dry-run driver must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* first init.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16×16 single-pod (data, model) or 2×16×16 (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> jax.sharding.Mesh:
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model_parallel: int = 1) -> Optional[jax.sharding.Mesh]:
+    """Best-effort mesh over whatever devices exist (CPU smoke / degraded pod)."""
+    n = jax.device_count()
+    if n == 1:
+        return None
+    data = n // model_parallel
+    return make_mesh((data, model_parallel), ("data", "model"))
+
+
+def partition_axes_for(mesh: Optional[jax.sharding.Mesh]):
+    """DrJAX partition axes on this mesh: ("pod", "data") when pods exist."""
+    if mesh is None:
+        return None
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod", "data")
+    if "data" in names:
+        return "data"
+    return None

@@ -1,0 +1,6 @@
+"""Pure-JAX model zoo for the assigned architectures."""
+
+from .config import ModelConfig
+from . import registry
+
+__all__ = ["ModelConfig", "registry"]

@@ -1,0 +1,180 @@
+"""Composable transformer / recurrent / RWKV blocks with a uniform interface.
+
+``block_apply(cfg, kind, params, x, positions, mode, cache)`` where
+
+ * ``kind``  ∈ {"attention", "recurrent", "rwkv"}
+ * ``mode``  ∈ {"train", "prefill", "decode"}
+ * ``cache`` is the block's decode state (KV cache / LRU state / WKV state)
+
+Returns ``(x_out, aux_loss, new_cache)``. ``aux_loss`` is nonzero only for
+MoE blocks (load-balancing loss).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, common, mlp, moe, rglru, rwkv
+from .partitioning import with_logical_constraint
+
+
+def block_init(rng, cfg, kind: str = "attention"):
+    ks = jax.random.split(rng, 4)
+    d, dt = cfg.d_model, cfg.jnp_dtype
+    p = {"ln1": common.rmsnorm_init(d, dt), "ln2": common.rmsnorm_init(d, dt)}
+    if kind == "attention":
+        p["attn"] = attention.init_params(ks[0], cfg)
+    elif kind == "recurrent":
+        p["rec"] = rglru.init_params(ks[0], cfg)
+    elif kind == "rwkv":
+        p["tm"] = rwkv.init_params(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if kind != "rwkv":
+        if cfg.family == "moe":
+            p["moe"] = moe.init_params(ks[1], cfg)
+        else:
+            p["mlp"] = mlp.init_params(ks[1], cfg)
+    return p
+
+
+def block_axes(cfg, kind: str = "attention"):
+    ax = {"ln1": {"scale": (None,)}, "ln2": {"scale": (None,)}}
+    if kind == "attention":
+        ax["attn"] = attention.param_axes(cfg)
+    elif kind == "recurrent":
+        ax["rec"] = rglru.param_axes(cfg)
+    elif kind == "rwkv":
+        ax["tm"] = rwkv.param_axes(cfg)
+    if kind != "rwkv":
+        if cfg.family == "moe":
+            ax["moe"] = moe.param_axes(cfg)
+        else:
+            ax["mlp"] = mlp.param_axes(cfg)
+    return ax
+
+
+def block_cache_init(cfg, kind: str, batch: int, max_len: int):
+    if kind == "attention":
+        window = cfg.window_size if cfg.attention == "local" else None
+        return attention.init_cache(cfg, batch, max_len, window=window)
+    if kind == "recurrent":
+        return rglru.init_state(cfg, batch)
+    if kind == "rwkv":
+        return rwkv.init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_cache_axes(cfg, kind: str):
+    if kind == "attention":
+        return attention.cache_axes(cfg)
+    if kind == "recurrent":
+        return rglru.state_axes()
+    if kind == "rwkv":
+        return rwkv.state_axes()
+    raise ValueError(kind)
+
+
+def _ffn(cfg, p, x):
+    if "moe" in p:
+        return moe.apply(cfg, p["moe"], x)
+    return mlp.apply(cfg, p["mlp"], x), jnp.zeros((), jnp.float32)
+
+
+def block_apply(
+    cfg,
+    kind: str,
+    p,
+    x,
+    positions,
+    *,
+    mode: str = "train",
+    cache=None,
+):
+    window = cfg.window_size if (cfg.attention == "local" and kind == "attention") else 0
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+
+    h = common.rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+
+    if kind == "attention":
+        ap = p["attn"]
+        if mode == "decode":
+            attn_out, new_cache = attention.decode_attention(
+                cfg, ap, h, cache, window=window
+            )
+        else:
+            q, k, v = attention.qkv(cfg, ap, h, positions)
+            attn_out = attention.self_attention(
+                cfg, q, k, v, causal=True, window=window
+            )
+            attn_out = attention.out_proj(ap, attn_out)
+            if mode == "prefill":
+                new_cache = attention.fill_cache(cache, k, v, window=window)
+        x = x + attn_out
+        x = with_logical_constraint(x, ("batch", "seq", "embed"))
+        h2 = common.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        ffn_out, aux = _ffn(cfg, p, h2)
+        x = x + ffn_out
+
+    elif kind == "recurrent":
+        rp = p["rec"]
+        if mode == "decode":
+            rec_out, new_cache = rglru.decode_step(cfg, rp, h, cache)
+        elif mode == "prefill":
+            rec_out, new_cache = rglru.prefill(cfg, rp, h)
+        else:
+            rec_out = rglru.apply(cfg, rp, h)
+        x = x + rec_out
+        x = with_logical_constraint(x, ("batch", "seq", "embed"))
+        h2 = common.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        ffn_out, aux = _ffn(cfg, p, h2)
+        x = x + ffn_out
+
+    elif kind == "rwkv":
+        tp = p["tm"]
+        if mode in ("decode", "prefill"):
+            tm_out, (tm_shift, wkv_state) = rwkv.time_mix(
+                cfg,
+                tp,
+                h,
+                shift_state=cache["tm_shift"],
+                wkv_state=cache["wkv"],
+                chunked=(mode == "prefill"),
+            )
+            x = x + tm_out
+            h2 = common.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+            cm_out, cm_shift = rwkv.channel_mix(
+                cfg, tp, h2, shift_state=cache["cm_shift"]
+            )
+            x = x + cm_out
+            new_cache = {
+                "tm_shift": tm_shift,
+                "cm_shift": cm_shift,
+                "wkv": wkv_state,
+            }
+        else:
+            tm_out, _ = rwkv.time_mix(cfg, tp, h, chunked=True)
+            x = x + tm_out
+            x = with_logical_constraint(x, ("batch", "seq", "embed"))
+            h2 = common.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+            cm_out, _ = rwkv.channel_mix(cfg, tp, h2)
+            x = x + cm_out
+    else:
+        raise ValueError(kind)
+
+    x = with_logical_constraint(x, ("batch", "seq", "embed"))
+    return x, aux, new_cache
+
+
+def layer_kinds(cfg):
+    """Per-layer block kinds for this config."""
+    if cfg.family == "ssm":
+        return ["rwkv"] * cfg.num_layers
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+    return ["attention"] * cfg.num_layers

@@ -1,0 +1,160 @@
+"""Shared model components: initializers, norms, embeddings, rotary, dense.
+
+Pure-JAX module style: every layer is an ``init(rng, ...) -> params`` plus an
+``apply(params, x, ...) -> y`` pair, with params as nested dicts of arrays.
+No flax dependency — parameters are plain pytrees, which keeps them directly
+compatible with DrJAX partitioned structures (a partitioned model is simply
+the same pytree with a leading group axis on every leaf).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def normal_init(rng, shape, dtype, stddev: Optional[float] = None):
+    if stddev is None:
+        fan_in = shape[0] if len(shape) >= 1 else 1
+        stddev = 1.0 / math.sqrt(max(fan_in, 1))
+    return (stddev * jax.random.normal(rng, shape)).astype(dtype)
+
+
+def zeros_init(_rng, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense / einsum layers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, in_dim: int, out_shape, dtype, use_bias=False):
+    """General projection: (in_dim,) -> out_shape (possibly multi-dim)."""
+    if isinstance(out_shape, int):
+        out_shape = (out_shape,)
+    w = normal_init(rng, (in_dim, *out_shape), dtype)
+    p = {"w": w}
+    if use_bias:
+        p["b"] = jnp.zeros(out_shape, dtype)
+    return p
+
+
+def dense_apply(p, x):
+    """x: (..., in_dim) @ w: (in_dim, *out) -> (..., *out)."""
+    w = p["w"]
+    out = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    if "b" in p:
+        out = out + p["b"].astype(out.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(rng, vocab: int, d: int, dtype):
+    return {"table": normal_init(rng, (vocab, d), dtype, stddev=1.0)}
+
+
+def embedding_lookup(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def embedding_logits(p, x):
+    """Tied-readout logits."""
+    return jax.lax.dot_general(
+        x, p["table"], (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]  # broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """logits: (..., V) f32; labels: (...) int32. Mean over unmasked tokens."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

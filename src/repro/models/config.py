@@ -1,0 +1,210 @@
+"""Model configuration for the architecture zoo.
+
+One frozen dataclass covers all 10 assigned families (dense / MoE / VLM /
+audio enc-dec / hybrid / SSM). Exact per-arch values live in
+``repro/configs/<id>.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | vlm | audio | hybrid | ssm
+
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+
+    # --- attention ---
+    attention: str = "global"  # global | local | none
+    window_size: int = 0  # for local attention
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+
+    # --- hybrid (recurrentgemma): repeating block pattern ---
+    # e.g. ("recurrent", "recurrent", "attention") for RG's 1 attn : 2 rec
+    block_pattern: Tuple[str, ...] = ()
+    lru_width: int = 0  # RG-LRU width (0 -> d_model)
+
+    # --- ssm (rwkv6) ---
+    rwkv_head_dim: int = 64
+
+    # --- encoder-decoder (seamless) ---
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+
+    # --- modality frontend stubs ---
+    # none | vision_patches (llava anyres) | audio_frames (seamless)
+    frontend: str = "none"
+    num_frontend_tokens: int = 0  # patch/frame embeddings per example
+
+    # --- numerics / structure ---
+    act: str = "silu"  # silu (SwiGLU) | gelu (GeGLU)
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"  # activation/param dtype for lowering
+    tie_embeddings: bool = False
+
+    # --- execution ---
+    mesh_strategy: str = "tp"  # tp: model dims over "model" axis; dp: pure data
+    scan_layers: bool = True  # lax.scan over stacked layers (uniform stacks)
+    remat: str = "none"  # none | full | dots — activation checkpoint policy
+    attn_impl: str = "blocked"  # blocked | naive | flash(pallas, TPU only)
+    tp_comm: str = "bf16"  # bf16 | int8 — TP reduction wire format (fwd-only steps)
+    q_block: int = 512
+    kv_block: int = 1024
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.lru_width == 0:
+            object.__setattr__(self, "lru_width", self.d_model)
+        if self.family == "hybrid" and not self.block_pattern:
+            object.__setattr__(
+                self, "block_pattern", ("recurrent", "recurrent", "attention")
+            )
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def q_heads_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    # ------------------------------------------------------------------
+    # parameter counting (used for 6·N·D roofline accounting)
+    # ------------------------------------------------------------------
+
+    def _attn_params(self) -> int:
+        hd = self.head_dim
+        q = self.d_model * self.num_heads * hd
+        kv = 2 * self.d_model * self.num_kv_heads * hd
+        o = self.num_heads * hd * self.d_model
+        b = (self.num_heads + 2 * self.num_kv_heads) * hd if self.qkv_bias else 0
+        return q + kv + o + b
+
+    def _dense_ffn_params(self, d_ff: Optional[int] = None) -> int:
+        d_ff = d_ff or self.d_ff
+        return 3 * self.d_model * d_ff  # gated (SwiGLU/GeGLU): wi, wg, wo
+
+    def _rglru_params(self) -> int:
+        w = self.lru_width
+        # linear in/out (conv-free simplification), gates a/x, Λ params
+        return 2 * self.d_model * w + 2 * w * (w // 8) * 8 // 8 + 2 * w
+
+    def _rwkv_params(self) -> int:
+        d = self.d_model
+        # time-mix: r,k,v,g,o projections + data-dependent decay lora + mixes
+        tm = 5 * d * d + 2 * d * 64 + 6 * d
+        cm = 2 * d * self.d_ff + d * d  # channel mix (k, v, receptance)
+        return tm + cm
+
+    def layer_params(self, layer_kind: str = "attention") -> int:
+        norms = 2 * self.d_model
+        if self.family == "ssm":
+            return self._rwkv_params() + norms
+        if layer_kind == "recurrent":
+            return self._rglru_params() + self._dense_ffn_params() + norms
+        ffn = (
+            self.num_experts * self._dense_ffn_params()
+            + self.d_model * self.num_experts  # router
+            if self.family in ("moe",)
+            else self._dense_ffn_params()
+        )
+        return self._attn_params() + ffn + norms
+
+    def active_layer_params(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        norms = 2 * self.d_model
+        if self.family == "ssm":
+            return self._rwkv_params() + norms
+        if self.family == "moe":
+            ffn = self.experts_per_token * self._dense_ffn_params() + (
+                self.d_model * self.num_experts
+            )
+            return self._attn_params() + ffn + norms
+        return self.layer_params()
+
+    def _pattern_counts(self):
+        if self.family != "hybrid":
+            return {"attention": self.num_layers}
+        pat = self.block_pattern
+        full, rem = divmod(self.num_layers, len(pat))
+        counts = {}
+        for i, kind in enumerate(pat):
+            counts[kind] = counts.get(kind, 0) + full + (1 if i < rem else 0)
+        return counts
+
+    def param_count(self) -> int:
+        emb = self.vocab_size * self.d_model
+        head = 0 if self.tie_embeddings else self.vocab_size * self.d_model
+        body = 0
+        for kind, cnt in self._pattern_counts().items():
+            body += cnt * self.layer_params(kind)
+        if self.is_encoder_decoder:
+            # encoder layers + decoder cross-attention
+            body += self.encoder_layers * self.layer_params()
+            body += self.num_layers * self._attn_params()  # cross-attn
+        return emb + head + body + self.d_model  # final norm
+
+    def active_param_count(self) -> int:
+        emb = self.vocab_size * self.d_model
+        head = 0 if self.tie_embeddings else self.vocab_size * self.d_model
+        body = 0
+        for kind, cnt in self._pattern_counts().items():
+            if kind == "attention" or self.family != "hybrid":
+                body += cnt * self.active_layer_params()
+            else:
+                body += cnt * self.layer_params(kind)
+        if self.is_encoder_decoder:
+            body += self.encoder_layers * self.active_layer_params()
+            body += self.num_layers * self._attn_params()
+        return emb + head + body + self.d_model
+
+    # ------------------------------------------------------------------
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A smoke-test-sized config of the same family."""
+        small = dict(
+            num_layers=min(self.num_layers, 2 * len(self.block_pattern) or 2),
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
+            head_dim=16,
+            d_ff=128,
+            vocab_size=256,
+            lru_width=64,
+            window_size=min(self.window_size, 32) if self.window_size else 0,
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            experts_per_token=(
+                min(self.experts_per_token, 2) if self.experts_per_token else 0
+            ),
+            encoder_layers=min(self.encoder_layers, 2),
+            num_frontend_tokens=(
+                min(self.num_frontend_tokens, 8) if self.num_frontend_tokens else 0
+            ),
+            dtype="float32",
+            attn_impl="naive",
+            q_block=8,
+            kv_block=8,
+        )
+        if self.family == "hybrid":
+            small["num_layers"] = len(self.block_pattern)
+        small.update(overrides)
+        return dataclasses.replace(self, **small)

@@ -1,0 +1,238 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone).
+
+The speech/text frontend is a STUB per the task card: ``input_specs()``
+supplies precomputed frame embeddings (B, S_frames, D) for the encoder. The
+decoder is a standard causal transformer with cross-attention into the
+encoder memory.
+
+Serving: ``encode`` runs once per request; ``prefill``/``decode_step`` manage
+the decoder's self-attention KV cache plus per-layer precomputed cross K/V.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, common, mlp
+from .partitioning import with_logical_constraint
+
+
+def _enc_block_init(rng, cfg):
+    ks = jax.random.split(rng, 2)
+    d, dt = cfg.d_model, cfg.jnp_dtype
+    return {
+        "ln1": common.rmsnorm_init(d, dt),
+        "attn": attention.init_params(ks[0], cfg),
+        "ln2": common.rmsnorm_init(d, dt),
+        "mlp": mlp.init_params(ks[1], cfg),
+    }
+
+
+def _dec_block_init(rng, cfg):
+    ks = jax.random.split(rng, 3)
+    d, dt = cfg.d_model, cfg.jnp_dtype
+    return {
+        "ln1": common.rmsnorm_init(d, dt),
+        "self_attn": attention.init_params(ks[0], cfg),
+        "ln_x": common.rmsnorm_init(d, dt),
+        "cross_attn": attention.init_params(ks[1], cfg, cross=True),
+        "ln2": common.rmsnorm_init(d, dt),
+        "mlp": mlp.init_params(ks[2], cfg),
+    }
+
+
+def init_params(rng, cfg):
+    ks = jax.random.split(rng, 4)
+    pv = -(-cfg.vocab_size // 512) * 512
+    enc_rngs = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_rngs = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embed": common.embedding_init(ks[2], pv, cfg.d_model, cfg.jnp_dtype),
+        "enc_layers": jax.vmap(lambda r: _enc_block_init(r, cfg))(enc_rngs),
+        "dec_layers": jax.vmap(lambda r: _dec_block_init(r, cfg))(dec_rngs),
+        "enc_ln": common.rmsnorm_init(cfg.d_model, cfg.jnp_dtype),
+        "final_ln": common.rmsnorm_init(cfg.d_model, cfg.jnp_dtype),
+        "lm_head": {
+            "w": common.normal_init(ks[3], (cfg.d_model, pv), cfg.jnp_dtype)
+        },
+    }
+
+
+def param_axes(cfg):
+    def stack(ax):
+        return jax.tree_util.tree_map(
+            lambda a: ("layers",) + a,
+            ax,
+            is_leaf=lambda v: isinstance(v, tuple)
+            and all(isinstance(e, (str, type(None))) for e in v),
+        )
+
+    attn_ax = attention.param_axes(cfg)
+    enc = {
+        "ln1": {"scale": (None,)},
+        "attn": attn_ax,
+        "ln2": {"scale": (None,)},
+        "mlp": mlp.param_axes(cfg),
+    }
+    dec = {
+        "ln1": {"scale": (None,)},
+        "self_attn": attn_ax,
+        "ln_x": {"scale": (None,)},
+        "cross_attn": attention.param_axes(cfg, cross=True),
+        "ln2": {"scale": (None,)},
+        "mlp": mlp.param_axes(cfg),
+    }
+    return {
+        "embed": {"table": ("p_vocab", "p_fsdp")},
+        "enc_layers": stack(enc),
+        "dec_layers": stack(dec),
+        "enc_ln": {"scale": (None,)},
+        "final_ln": {"scale": (None,)},
+        "lm_head": {"w": ("p_fsdp", "p_vocab")},
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg, params, frames):
+    """frames: (B, S, D) stub frontend embeddings -> encoder memory (B, S, D)."""
+    x = frames.astype(cfg.jnp_dtype)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = with_logical_constraint(x, ("batch", "seq", "embed"))
+
+    def body(h, layer_p):
+        hn = common.rmsnorm_apply(layer_p["ln1"], h, cfg.norm_eps)
+        q, k, v = attention.qkv(cfg, layer_p["attn"], hn, positions)
+        a = attention.self_attention(cfg, q, k, v, causal=False, window=0)
+        h = h + attention.out_proj(layer_p["attn"], a)
+        hn = common.rmsnorm_apply(layer_p["ln2"], h, cfg.norm_eps)
+        h = h + mlp.apply(cfg, layer_p["mlp"], hn)
+        h = with_logical_constraint(h, ("batch", "seq", "embed"))
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return common.rmsnorm_apply(params["enc_ln"], x, cfg.norm_eps)
+
+
+def encode_memory_kv(cfg, params, memory):
+    """Precompute per-decoder-layer cross K/V: (L, B, Sm, Hkv, hd)."""
+
+    def per_layer(layer_p):
+        ca = layer_p["cross_attn"]
+        k = attention._proj(memory, ca["wk"], ca.get("bk"))
+        v = attention._proj(memory, ca["wv"], ca.get("bv"))
+        return k, v
+
+    return jax.vmap(per_layer)(params["dec_layers"])
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+
+def _dec_block(cfg, layer_p, x, positions, memory_kv, mode, cache):
+    mk, mv = memory_kv
+    new_cache = cache
+    h = common.rmsnorm_apply(layer_p["ln1"], x, cfg.norm_eps)
+    if mode == "decode":
+        a, new_cache = attention.decode_attention(cfg, layer_p["self_attn"], h, cache)
+        x = x + a
+    else:
+        q, k, v = attention.qkv(cfg, layer_p["self_attn"], h, positions)
+        a = attention.self_attention(cfg, q, k, v, causal=True, window=0)
+        x = x + attention.out_proj(layer_p["self_attn"], a)
+        if mode == "prefill":
+            new_cache = attention.fill_cache(cache, k, v)
+    hx = common.rmsnorm_apply(layer_p["ln_x"], x, cfg.norm_eps)
+    x = x + attention.cross_attention(cfg, layer_p["cross_attn"], hx, mk, mv)
+    h2 = common.rmsnorm_apply(layer_p["ln2"], x, cfg.norm_eps)
+    x = x + mlp.apply(cfg, layer_p["mlp"], h2)
+    return with_logical_constraint(x, ("batch", "seq", "embed")), new_cache
+
+
+def decode_stack(cfg, params, tokens, memory, *, mode="train", caches=None,
+                 memory_kv=None):
+    x = common.embedding_lookup(params["embed"], tokens)
+    b, s = x.shape[:2]
+    if mode == "decode":
+        # position comes from the cache
+        positions = None
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if memory_kv is None:
+        memory_kv = encode_memory_kv(cfg, params, memory)
+
+    if mode == "train":
+
+        def body(h, scanned):
+            layer_p, mkv = scanned
+            h, _ = _dec_block(cfg, layer_p, h, positions, mkv, "train", None)
+            return h, None
+
+        x, _ = jax.lax.scan(body, x, (params["dec_layers"], memory_kv))
+        new_caches = None
+    else:
+
+        def body(h, scanned):
+            layer_p, mkv, cache = scanned
+            h, nc = _dec_block(cfg, layer_p, h, positions, mkv, mode, cache)
+            return h, nc
+
+        x, new_caches = jax.lax.scan(
+            body, x, (params["dec_layers"], memory_kv, caches)
+        )
+
+    x = common.rmsnorm_apply(params["final_ln"], x, cfg.norm_eps)
+    logits = jax.lax.dot_general(
+        x, params["lm_head"]["w"], (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return with_logical_constraint(logits, ("batch", "seq", "vocab")), new_caches
+
+
+# ---------------------------------------------------------------------------
+# top level
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg, params, batch):
+    """batch: {frames (B,Sf,D), tokens (B,St), labels (B,St)}."""
+    memory = encode(cfg, params, batch["frames"])
+    logits, _ = decode_stack(cfg, params, batch["tokens"], memory, mode="train")
+    return common.softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+def init_caches(cfg, batch: int, max_len: int):
+    one = attention.init_cache(cfg, batch, max_len)
+    return jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (cfg.num_layers,) + l.shape), one
+    )
+
+
+def prefill(cfg, params, frames, tokens, *, max_len=None):
+    memory = encode(cfg, params, frames)
+    memory_kv = encode_memory_kv(cfg, params, memory)
+    b, s = tokens.shape
+    max_len = max_len or s
+    caches = init_caches(cfg, b, max_len)
+    logits, caches = decode_stack(
+        cfg, params, tokens, memory, mode="prefill", caches=caches,
+        memory_kv=memory_kv,
+    )
+    return logits[:, -1], caches, memory_kv
+
+
+def decode_step(cfg, params, token, caches, memory_kv):
+    logits, caches = decode_stack(
+        cfg, params, token, None, mode="decode", caches=caches,
+        memory_kv=memory_kv,
+    )
+    return logits[:, -1], caches

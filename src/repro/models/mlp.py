@@ -1,0 +1,52 @@
+"""Gated feed-forward (SwiGLU / GeGLU) blocks."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common, tpcomm
+from .partitioning import current_mesh, resolve_axis, with_logical_constraint
+
+
+def init_params(rng, cfg, d_ff=None):
+    d, dt = cfg.d_model, cfg.jnp_dtype
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "wi": common.normal_init(ks[0], (d, d_ff), dt),
+        "wg": common.normal_init(ks[1], (d, d_ff), dt),
+        "wo": common.normal_init(ks[2], (d_ff, d), dt),
+    }
+
+
+def param_axes(cfg):
+    return {
+        "wi": ("p_fsdp", "p_ff"),
+        "wg": ("p_fsdp", "p_ff"),
+        "wo": ("p_ff", "p_fsdp"),
+    }
+
+
+def apply(cfg, p, x):
+    act = common.activation(cfg.act)
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"], preferred_element_type=jnp.float32)
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"], preferred_element_type=jnp.float32)
+    h = (act(g) * h).astype(x.dtype)
+    h = with_logical_constraint(h, ("batch", "seq", "ff"))
+    if (
+        cfg.tp_comm == "int8"
+        and current_mesh() is not None
+        and resolve_axis("ff", h.shape[-1]) == "model"
+    ):
+        # quantized TP reduction (see tpcomm): forward-only steps
+        b, s_, f = h.shape
+        mesh = current_mesh()
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        out = tpcomm.int8_matmul_reduce(
+            h.reshape(b * s_, f), p["wo"], batch_axes=batch_axes,
+            out_dtype=x.dtype,
+        ).reshape(b, s_, -1)
+        return out
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"], preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)

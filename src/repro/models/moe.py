@@ -1,0 +1,163 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based dispatch.
+
+GShard/Switch-style einsum dispatch, adapted for TPU:
+
+ * tokens are grouped by their data-parallel shard (``G`` groups), so the
+   dispatch/combine tensors are sharded over (data: G, model: E) and never
+   materialize globally;
+ * experts shard over the ``model`` mesh axis (expert parallelism); the
+   dispatch einsum induces the all-to-all;
+ * router runs in fp32 with jitter-free deterministic top-k (inference safe).
+
+The load-balancing auxiliary loss follows Shazeer et al. / GShard.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .partitioning import with_logical_constraint
+
+
+def init_params(rng, cfg):
+    d, e, dt = cfg.d_model, cfg.num_experts, cfg.jnp_dtype
+    ks = jax.random.split(rng, 4)
+    return {
+        "router": common.normal_init(ks[0], (d, e), jnp.float32, stddev=0.02),
+        "wi": common.normal_init(ks[1], (e, d, cfg.d_ff), dt),
+        "wg": common.normal_init(ks[2], (e, d, cfg.d_ff), dt),
+        "wo": common.normal_init(ks[3], (e, cfg.d_ff, d), dt),
+    }
+
+
+def param_axes(cfg):
+    return {
+        "router": ("p_fsdp", None),
+        "wi": ("p_experts", "p_fsdp", None),
+        "wg": ("p_experts", "p_fsdp", None),
+        "wo": ("p_experts", None, "p_fsdp"),
+    }
+
+
+def _combine(cfg, eout, combine, out_shape):
+    """Expert-combine contraction over the (model-sharded) expert dim.
+
+    With ``tp_comm == "int8"`` the cross-shard partial-sum reduction rides
+    int8 all-gather (see repro.models.tpcomm) — forward-only steps.
+    """
+    from . import tpcomm
+    from .partitioning import current_mesh, resolve_axis
+
+    b, s, d = out_shape
+    if (
+        cfg.tp_comm == "int8"
+        and current_mesh() is not None
+        and resolve_axis("experts", eout.shape[1]) == "model"
+    ):
+        import jax
+        from jax.sharding import PartitionSpec as P
+
+        mesh = current_mesh()
+        batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        bspec = batch if len(batch) > 1 else (batch[0] if batch else None)
+
+        def local(eo, cm):
+            part = jnp.einsum(
+                "gecd,gtec->gtd", eo, cm, preferred_element_type=jnp.float32
+            )
+            q, sc = tpcomm._quant_rows(part)
+            qg = jax.lax.all_gather(q, "model")
+            sg = jax.lax.all_gather(sc, "model")
+            out = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
+            return out.astype(eo.dtype)
+
+        fn = jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(bspec, "model", None, None),
+                      P(bspec, None, "model", None)),
+            out_specs=P(bspec, None, None),
+            check_vma=False,
+        )
+        return fn(eout, combine).reshape(b, s, d)
+    out = jnp.einsum("gecd,gtec->gtd", eout, combine)
+    return out.reshape(b, s, d)
+
+
+def _top_k_mask(gates, k):
+    """gates: (..., E) -> (mask (..., E, k), weights (..., E, k))."""
+    vals, idx = jax.lax.top_k(gates, k)  # (..., k)
+    onehot = jax.nn.one_hot(idx, gates.shape[-1], dtype=gates.dtype)  # (...,k,E)
+    return onehot, vals
+
+
+def _group_size(total_tokens: int, target: int = 512) -> int:
+    """Largest divisor of total_tokens that is <= target (static)."""
+    gs = min(target, total_tokens)
+    while total_tokens % gs != 0:
+        gs -= 1
+    return gs
+
+
+def apply(cfg, p, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    Tokens are re-grouped into fixed-size routing groups (GShard-style) so the
+    dispatch/combine tensors are O(tokens · gs · k · cf) — bounded per device
+    regardless of sequence length — instead of O(tokens · S · k · cf).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    act = common.activation(cfg.act)
+
+    total = b * s
+    gs = _group_size(total)
+    ng = total // gs
+    xg = x.reshape(ng, gs, d)
+    xg = with_logical_constraint(xg, ("batch", None, "embed"))
+
+    # ---- routing (fp32) ----
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    gates = jax.nn.softmax(logits, axis=-1)  # (G, T, E)
+    onehot, topv = _top_k_mask(gates, k)  # (G,T,k,E), (G,T,k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # ---- capacity assignment (per group) ----
+    cap = max(int(cfg.capacity_factor * gs * k / e), 1)
+    flat = onehot.reshape(ng, gs * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat) * flat  # (G, T*k, E)
+    keep = (pos_in_expert < cap) & (flat > 0)
+    pos = pos_in_expert.astype(jnp.int32)
+
+    cap_onehot = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=x.dtype)
+    dispatch = (keep.astype(x.dtype))[..., None] * cap_onehot  # (G,T*k,E,C)
+    dispatch = dispatch.reshape(ng, gs, k, e, cap)
+    combine = dispatch * topv[..., None, None].astype(x.dtype)
+    dispatch = dispatch.sum(2)  # (G, T, E, C)
+    combine = combine.sum(2)
+    dispatch = with_logical_constraint(dispatch, ("batch", None, "experts", None))
+    combine = with_logical_constraint(combine, ("batch", None, "experts", None))
+
+    # ---- expert computation (all-to-all induced by sharding) ----
+    xin = jnp.einsum("gtd,gtec->gecd", xg, dispatch)  # (G, E, C, D)
+    xin = with_logical_constraint(xin, ("batch", "experts", None, None))
+    h = jnp.einsum("gecd,edf->gecf", xin, p["wi"], preferred_element_type=jnp.float32)
+    g = jnp.einsum("gecd,edf->gecf", xin, p["wg"], preferred_element_type=jnp.float32)
+    h = (act(g) * h).astype(x.dtype)
+    eout = jnp.einsum("gecf,efd->gecd", h, p["wo"], preferred_element_type=jnp.float32)
+    eout = eout.astype(x.dtype)
+    eout = with_logical_constraint(eout, ("batch", "experts", None, None))
+    out = _combine(cfg, eout, combine, (b, s, d))
+    out = with_logical_constraint(out, ("batch", "seq", "embed"))
+
+    # ---- load-balance aux loss (GShard eq. 4) ----
+    frac_tokens = jnp.mean(onehot.sum(2), axis=(0, 1))  # (E,) fraction routed
+    frac_gates = jnp.mean(gates, axis=(0, 1))  # (E,)
+    aux = e * jnp.sum(frac_tokens * frac_gates) / k
+    return out, aux.astype(jnp.float32)

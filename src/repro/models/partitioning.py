@@ -1,0 +1,154 @@
+"""Logical-axis partitioning (MaxText-style) for the model zoo.
+
+Model code annotates tensors with *logical* axis names
+(``("batch", "seq", "heads", "head_dim")``); a rule table maps logical names
+to mesh axes. The same model code then runs on any mesh — single-pod
+``(data, model)``, multi-pod ``(pod, data, model)``, or CPU (no mesh — all
+constraints become no-ops).
+
+FSDP is purely a rule choice here: pointing a parameter's storage axis at
+``("data",)`` makes GSPMD keep it sharded at rest and all-gather it layer by
+layer inside the scan — no model-code change (this is the standard pjit FSDP
+pattern). The DrJAX partition axis composes on top: inside
+``drjax.map_fn``'s vmap, intermediates get the partition axes prepended via
+``spmd_axis_name``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+# Default logical → mesh-axis rules. First matching mesh axis set that exists
+# on the ambient mesh (and divides the dim, for parameters) wins.
+DEFAULT_RULES: Dict[str, Tuple[AxisName, ...]] = {
+    # activations
+    "batch": (("pod", "data"), "data"),
+    "seq": (None,),
+    "embed": ("model", None),  # sharded residual stream (Megatron seq-par analogue)
+    "heads": ("model",),
+    "kv_heads": ("model", None),
+    "head_dim": (None,),
+    "ff": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    # parameters (storage)
+    "p_embed": ("model", None),   # param rows over model axis
+    "p_vocab": ("model", None),
+    "p_ff": ("model",),
+    "p_heads": ("model",),
+    "p_kv_heads": ("model", None),
+    "p_head_dim": (None,),
+    "p_experts": ("model",),
+    "p_fsdp": ("data", None),     # FSDP storage axis
+    "layers": (None,),
+    # misc
+    "kv_batch": (("pod", "data"), "data"),
+    "kv_head_dim": ("model", None),
+    "recurrent_width": ("model",),
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        super().__init__()
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, Tuple[AxisName, ...]] = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Optional[Dict] = None):
+    """Install a mesh + logical-rule table for model code in this thread."""
+    old_mesh, old_rules = _CTX.mesh, _CTX.rules
+    _CTX.mesh = mesh
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _CTX.rules = merged
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = old_mesh, old_rules
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_axis(logical: Optional[str], dim_size: Optional[int] = None) -> AxisName:
+    """Resolve one logical axis name to mesh axis/axes (or None)."""
+    if logical is None or _CTX.mesh is None:
+        return None
+    sizes = _mesh_axis_sizes(_CTX.mesh)
+    for cand in _CTX.rules.get(logical, (None,)):
+        if cand is None:
+            return None
+        names = cand if isinstance(cand, tuple) else (cand,)
+        if not all(n in sizes for n in names):
+            continue
+        if dim_size is not None:
+            total = 1
+            for n in names:
+                total *= sizes[n]
+            if dim_size % total != 0:
+                continue
+        return cand
+    return None
+
+
+def spec_for(logical_axes: Sequence[Optional[str]], shape=None) -> P:
+    parts = []
+    for i, name in enumerate(logical_axes):
+        dim = None if shape is None else shape[i]
+        parts.append(resolve_axis(name, dim))
+    return P(*parts)
+
+
+def with_logical_constraint(x, logical_axes: Sequence[Optional[str]]):
+    """Constrain an array's sharding via logical axis names (no-op w/o mesh)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    assert x.ndim == len(logical_axes), (x.shape, logical_axes)
+    spec = spec_for(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(logical_axes: Sequence[Optional[str]], shape=None):
+    mesh = _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(logical_axes, shape))
+
+
+def tree_shardings(tree_logical, tree_shapes=None):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    if tree_shapes is None:
+        return jax.tree_util.tree_map(
+            lambda ax: named_sharding(ax),
+            tree_logical,
+            is_leaf=lambda v: isinstance(v, tuple) and all(
+                isinstance(e, (str, type(None))) for e in v
+            ),
+        )
+    return jax.tree_util.tree_map(
+        lambda ax, shp: named_sharding(ax, shp),
+        tree_logical,
+        tree_shapes,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            isinstance(e, (str, type(None))) for e in v
+        ),
+    )

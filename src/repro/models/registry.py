@@ -1,0 +1,213 @@
+"""Architecture registry: configs → init/loss/serve functions + input specs.
+
+Every assigned architecture is selectable by ``--arch <id>``; each shape cell
+(train_4k / prefill_32k / decode_32k / long_500k) maps to a concrete step
+function plus ``jax.ShapeDtypeStruct`` input stand-ins (no allocation — the
+dry-run lowers against these).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer, vlm
+from .config import ModelConfig
+
+ARCH_IDS = (
+    "phi35_moe",
+    "qwen3_moe",
+    "llava_next_34b",
+    "internlm2_20b",
+    "stablelm_3b",
+    "qwen2_72b",
+    "yi_34b",
+    "seamless_m4t_medium",
+    "recurrentgemma_2b",
+    "rwkv6_3b",
+    # the paper's own local-SGD experiment models
+    "lm_350m",
+    "lm_1b",
+    "lm_8b",
+)
+
+SHAPE_CELLS: Dict[str, Dict[str, int]] = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+# archs with O(S^2) full attention cannot run the 512k decode cell —
+# documented skip (DESIGN.md §Arch-applicability).
+SUBQUADRATIC = ("recurrentgemma_2b", "rwkv6_3b")
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def cell_applicable(cfg: ModelConfig, cell: str) -> Tuple[bool, str]:
+    if cell == "long_500k" and cfg.attention == "global" and cfg.family != "ssm":
+        return False, "full attention is O(S^2); 512k decode out of scope"
+    return True, ""
+
+
+def family_module(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return encdec
+    if cfg.family == "vlm":
+        return vlm
+    return transformer
+
+
+def init_params(rng, cfg: ModelConfig):
+    return family_module(cfg).init_params(rng, cfg)
+
+
+def param_axes(cfg: ModelConfig):
+    return family_module(cfg).param_axes(cfg)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    return family_module(cfg).loss_fn(cfg, params, batch)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; shardable, no device allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_spec(cfg: ModelConfig, batch: int, seq: int):
+    """The per-step training batch pytree spec."""
+    if cfg.is_encoder_decoder:
+        st = max(seq // 8, 16)
+        return {
+            "frames": _sds((batch, seq, cfg.d_model), jnp.dtype(cfg.dtype)),
+            "tokens": _sds((batch, st), jnp.int32),
+            "labels": _sds((batch, st), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        nf = max(min(cfg.num_frontend_tokens, seq // 2), 1)
+        st = seq - nf
+        return {
+            "embeds": _sds((batch, nf, cfg.d_model), jnp.dtype(cfg.dtype)),
+            "tokens": _sds((batch, st), jnp.int32),
+            "labels": _sds((batch, st), jnp.int32),
+        }
+    return {
+        "tokens": _sds((batch, seq), jnp.int32),
+        "labels": _sds((batch, seq), jnp.int32),
+    }
+
+
+def batch_axes(cfg: ModelConfig):
+    """Logical axes for the training batch."""
+    if cfg.is_encoder_decoder:
+        return {
+            "frames": ("batch", "seq", "embed"),
+            "tokens": ("batch", "seq"),
+            "labels": ("batch", "seq"),
+        }
+    if cfg.family == "vlm":
+        return {
+            "embeds": ("batch", "seq", "embed"),
+            "tokens": ("batch", "seq"),
+            "labels": ("batch", "seq"),
+        }
+    return {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+
+
+def make_concrete_batch(cfg: ModelConfig, batch: int, seq: int, rng=None):
+    """Small concrete batch for smoke tests / CPU training."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    spec = train_batch_spec(cfg, batch, seq)
+    out = {}
+    for k, s in spec.items():
+        kr, rng = jax.random.split(rng)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[k] = jax.random.randint(kr, s.shape, 0, cfg.vocab_size, s.dtype)
+        else:
+            out[k] = jax.random.normal(kr, s.shape, jnp.float32).astype(s.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# serve-step builders
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_fn(cfg: ModelConfig):
+    mod = family_module(cfg)
+
+    if cfg.is_encoder_decoder:
+
+        def prefill_fn(params, batch):
+            logits, caches, memkv = mod.prefill(
+                cfg, params, batch["frames"], batch["tokens"]
+            )
+            return logits, caches
+
+        return prefill_fn
+
+    if cfg.family == "vlm":
+
+        def prefill_fn(params, batch):
+            return mod.prefill(
+                cfg, params, batch["tokens"], embeds=batch["embeds"]
+            )
+
+        return prefill_fn
+
+    def prefill_fn(params, batch):
+        return mod.prefill(cfg, params, batch["tokens"])
+
+    return prefill_fn
+
+
+def make_decode_fn(cfg: ModelConfig):
+    mod = family_module(cfg)
+
+    if cfg.is_encoder_decoder:
+
+        def decode_fn(params, token, caches, memory_kv):
+            return mod.decode_step(cfg, params, token, caches, memory_kv)
+
+        return decode_fn
+
+    def decode_fn(params, token, caches):
+        return mod.decode_step(cfg, params, token, caches)
+
+    return decode_fn
+
+
+def decode_state_spec(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct pytree for the decode-time state (KV caches etc.)."""
+    mod = family_module(cfg)
+    caches = jax.eval_shape(lambda: mod.init_caches(cfg, batch, max_len))
+    extras = {}
+    if cfg.is_encoder_decoder:
+        mem_len = max_len
+        hkv, hd = cfg.num_kv_heads, cfg.head_dim
+        kv = _sds(
+            (cfg.num_layers, batch, mem_len, hkv, hd), jnp.dtype(cfg.dtype)
+        )
+        extras["memory_kv"] = (kv, kv)
+    return caches, extras
+
+
+def prefill_spec(cfg: ModelConfig, batch: int, seq: int):
+    return train_batch_spec(cfg, batch, seq)
+
+
+def decode_token_spec(cfg: ModelConfig, batch: int):
+    return _sds((batch, 1), jnp.int32)

@@ -1,0 +1,250 @@
+"""Decoder-only language model over the block zoo.
+
+Uniform-stack configs use ``lax.scan`` over layer-stacked parameters (compact
+HLO, fast compiles, remat-friendly) — the production pattern for 90+-layer
+models. Mixed-kind stacks (hybrid RG patterns) scan over each kind-group with
+interleaving handled by a Python loop over the (short) repeating pattern.
+
+Also supports ``embeds`` inputs (VLM / audio frontends inject precomputed
+patch/frame embeddings).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks, common
+from .partitioning import with_logical_constraint
+
+
+def padded_vocab(cfg) -> int:
+    return -(-cfg.vocab_size // 512) * 512
+
+
+def _uniform(cfg) -> bool:
+    return len(set(blocks.layer_kinds(cfg))) == 1 and cfg.scan_layers
+
+
+def init_params(rng, cfg):
+    kinds = blocks.layer_kinds(cfg)
+    ks = jax.random.split(rng, 3)
+    pv = padded_vocab(cfg)
+    params: Dict[str, Any] = {
+        "embed": common.embedding_init(ks[0], pv, cfg.d_model, cfg.jnp_dtype),
+        "final_ln": common.rmsnorm_init(cfg.d_model, cfg.jnp_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": common.normal_init(ks[1], (cfg.d_model, pv), cfg.jnp_dtype)
+        }
+    if _uniform(cfg):
+        kind = kinds[0]
+        layer_rngs = jax.random.split(ks[2], cfg.num_layers)
+        params["layers"] = jax.vmap(
+            lambda r: blocks.block_init(r, cfg, kind)
+        )(layer_rngs)
+    else:
+        layer_rngs = jax.random.split(ks[2], cfg.num_layers)
+        params["layers"] = [
+            blocks.block_init(layer_rngs[i], cfg, kinds[i])
+            for i in range(cfg.num_layers)
+        ]
+    return params
+
+
+def param_axes(cfg):
+    kinds = blocks.layer_kinds(cfg)
+    axes: Dict[str, Any] = {
+        "embed": {"table": ("p_vocab", "p_fsdp")},
+        "final_ln": {"scale": (None,)},
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = {"w": ("p_fsdp", "p_vocab")}
+    if _uniform(cfg):
+        base = blocks.block_axes(cfg, kinds[0])
+        # prepend the stacked-layers axis to every leaf
+        axes["layers"] = jax.tree_util.tree_map(
+            lambda ax: ("layers",) + ax,
+            base,
+            is_leaf=lambda v: isinstance(v, tuple)
+            and all(isinstance(e, (str, type(None))) for e in v),
+        )
+    else:
+        axes["layers"] = [blocks.block_axes(cfg, k) for k in kinds]
+    return axes
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    raise ValueError(cfg.remat)
+
+
+def backbone(cfg, params, x, positions, *, mode="train", caches=None):
+    """Run the layer stack. x: (B, S, D). Returns (x, aux, new_caches)."""
+    kinds = blocks.layer_kinds(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if _uniform(cfg):
+        kind = kinds[0]
+
+        if mode == "train":
+
+            def body(carry, layer_p):
+                h, aux = carry
+                h, a, _ = blocks.block_apply(
+                    cfg, kind, layer_p, h, positions, mode="train"
+                )
+                return (h, aux + a), None
+
+            body = _maybe_remat(cfg, body)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["layers"])
+            return x, aux_total, None
+
+        def body(carry, scanned):
+            h, aux = carry
+            layer_p, cache = scanned
+            h, a, new_cache = blocks.block_apply(
+                cfg, kind, layer_p, h, positions, mode=mode, cache=cache
+            )
+            return (h, aux + a), new_cache
+
+        (x, aux_total), new_caches = jax.lax.scan(
+            body, (x, aux_total), (params["layers"], caches)
+        )
+        return x, aux_total, new_caches
+
+    # --- non-uniform (hybrid) stack: python loop ---
+    new_caches = []
+    for i, kind in enumerate(kinds):
+        cache = None if caches is None else caches[i]
+        if mode == "train" and cfg.remat != "none":
+            fn = _maybe_remat(
+                cfg,
+                lambda p_, x_, kind_=kind: blocks.block_apply(
+                    cfg, kind_, p_, x_, positions, mode="train"
+                ),
+            )
+            x, a, nc = fn(params["layers"][i], x)
+        else:
+            x, a, nc = blocks.block_apply(
+                cfg, kind, params["layers"][i], x, positions, mode=mode,
+                cache=cache,
+            )
+        aux_total = aux_total + a
+        new_caches.append(nc)
+    return x, aux_total, (new_caches if mode != "train" else None)
+
+
+def _logits(cfg, params, x):
+    x = common.rmsnorm_apply(params["final_ln"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = common.embedding_logits(params["embed"], x)
+    else:
+        logits = jax.lax.dot_general(
+            x, params["lm_head"]["w"], (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    return with_logical_constraint(logits, ("batch", "seq", "vocab"))
+
+
+def forward(cfg, params, tokens=None, *, embeds=None, positions=None, mode="train",
+            caches=None):
+    """tokens: (B, S) int32 or embeds: (B, S, D). Returns (logits, aux, caches)."""
+    if embeds is None:
+        x = common.embedding_lookup(params["embed"], tokens)
+    else:
+        x = embeds.astype(cfg.jnp_dtype)
+        if tokens is not None:  # VLM: prepend frontend embeddings to text
+            tx = common.embedding_lookup(params["embed"], tokens)
+            x = jnp.concatenate([x, tx], axis=1)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = with_logical_constraint(x, ("batch", "seq", "embed"))
+    x, aux, new_caches = backbone(
+        cfg, params, x, positions, mode=mode, caches=caches
+    )
+    return _logits(cfg, params, x), aux, new_caches
+
+
+def loss_fn(cfg, params, batch):
+    """batch: {tokens, labels, [embeds], [mask]} -> scalar loss."""
+    logits, aux, _ = forward(
+        cfg,
+        params,
+        batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        mode="train",
+    )
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # VLM: loss only on text tail
+        logits = logits[:, -labels.shape[1]:]
+    loss = common.softmax_cross_entropy(logits, labels, batch.get("mask"))
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg, batch: int, max_len: int):
+    kinds = blocks.layer_kinds(cfg)
+    if _uniform(cfg):
+        one = blocks.block_cache_init(cfg, kinds[0], batch, max_len)
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l[None], (cfg.num_layers,) + l.shape), one
+        )
+    return [
+        blocks.block_cache_init(cfg, k, batch, max_len) for k in kinds
+    ]
+
+
+def cache_axes(cfg):
+    kinds = blocks.layer_kinds(cfg)
+    if _uniform(cfg):
+        base = blocks.block_cache_axes(cfg, kinds[0])
+        return jax.tree_util.tree_map(
+            lambda ax: ("layers",) + ax,
+            base,
+            is_leaf=lambda v: isinstance(v, tuple)
+            and all(isinstance(e, (str, type(None))) for e in v),
+        )
+    return [blocks.block_cache_axes(cfg, k) for k in kinds]
+
+
+def prefill(cfg, params, tokens=None, *, embeds=None, max_len=None):
+    """Process a prompt, returning (last_logits, caches)."""
+    if tokens is not None:
+        s = tokens.shape[1]
+        b = tokens.shape[0]
+    else:
+        s = embeds.shape[1]
+        b = embeds.shape[0]
+    if embeds is not None and tokens is not None:
+        s = s + embeds.shape[1]
+    max_len = max_len or s
+    caches = init_caches(cfg, b, max_len)
+    logits, _, caches = forward(
+        cfg, params, tokens, embeds=embeds, mode="prefill", caches=caches
+    )
+    return logits[:, -1], caches
+
+
+def decode_step(cfg, params, token, caches):
+    """token: (B, 1) int32. Returns (logits (B, V), new_caches)."""
+    logits, _, caches = forward(
+        cfg, params, token, mode="decode", caches=caches
+    )
+    return logits[:, -1], caches

@@ -1,0 +1,20 @@
+"""VLM (llava-next) backbone: decoder-only LM consuming anyres patch embeds.
+
+The vision tower + anyres tiling is a STUB per the task card:
+``input_specs()`` provides precomputed patch embeddings (B, n_patches, D)
+which are prepended to the text-token embeddings; loss applies to text
+positions only (handled in ``transformer.loss_fn``).
+"""
+
+from __future__ import annotations
+
+from . import transformer
+
+init_params = transformer.init_params
+param_axes = transformer.param_axes
+forward = transformer.forward
+loss_fn = transformer.loss_fn
+prefill = transformer.prefill
+decode_step = transformer.decode_step
+init_caches = transformer.init_caches
+cache_axes = transformer.cache_axes

@@ -1,0 +1,25 @@
+"""Optimizers (no optax dependency): local/client and server/outer."""
+
+from .optimizers import (
+    Optimizer,
+    adamw,
+    clip_by_global_norm,
+    sgd,
+    global_norm,
+)
+from .schedules import constant, cosine_decay, linear_warmup
+from .server import diloco_optimizer, fedadam, fedavg_momentum
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "sgd",
+    "clip_by_global_norm",
+    "global_norm",
+    "constant",
+    "cosine_decay",
+    "linear_warmup",
+    "diloco_optimizer",
+    "fedadam",
+    "fedavg_momentum",
+]

@@ -1,0 +1,124 @@
+"""Minimal optax-style optimizers as (init, update) pairs over pytrees.
+
+``update(grads, state, params) -> (updates, state)`` where ``updates`` are
+*deltas* to be added to params (optax sign convention: already negated).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda l: (l * scale).astype(l.dtype), tree), norm
+
+
+def sgd(lr: Schedule, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+            )
+        return state
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mu"],
+                grads,
+            )
+            if nesterov:
+                upd = jax.tree_util.tree_map(
+                    lambda m, g: momentum * m + g.astype(jnp.float32), mu, grads
+                )
+            else:
+                upd = mu
+            new_state = {"step": step, "mu": mu}
+        else:
+            upd = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+            new_state = {"step": step}
+        updates = jax.tree_util.tree_map(lambda u: -lr_t * u, upd)
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """AdamW with fp32 moments (params may be bf16 — standard mixed precision)."""
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads,
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads,
+        )
+
+        def upd(m_, v_, p):
+            mhat = m_ / c1
+            vhat = v_ / c2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return -lr_t * u
+
+        updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates
+    )

@@ -1,0 +1,99 @@
+"""Server-side (outer-loop) optimizers for MapReduce training rounds.
+
+These consume the *average client delta* produced by a DrJAX reduction and
+update the global model: FedAvg(+server momentum), FedAdam (Reddi et al.),
+and the DiLoCo outer optimizer (Nesterov momentum SGD; Douillard et al. 2023
+— one of the algorithms the paper explicitly cites as expressible in DrJAX).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .optimizers import Optimizer
+
+
+def fedavg_momentum(lr: float = 1.0, momentum: float = 0.0) -> Optimizer:
+    """Classic FedAvg: apply the mean client delta (optionally with momentum)."""
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params
+            )
+        return state
+
+    def update(mean_delta, state, params=None):
+        step = state["step"] + 1
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, d: momentum * m + d.astype(jnp.float32),
+                state["mu"], mean_delta,
+            )
+            upd = jax.tree_util.tree_map(lambda m: lr * m, mu)
+            return upd, {"step": step, "mu": mu}
+        upd = jax.tree_util.tree_map(
+            lambda d: lr * d.astype(jnp.float32), mean_delta
+        )
+        return upd, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def fedadam(lr: float = 1e-2, b1: float = 0.9, b2: float = 0.99,
+            eps: float = 1e-3) -> Optimizer:
+    """FedAdam (Reddi et al. 2021): Adam on the mean client delta."""
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+        }
+
+    def update(mean_delta, state, params=None):
+        step = state["step"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, d: b1 * m_ + (1 - b1) * d.astype(jnp.float32),
+            state["m"], mean_delta,
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, d: b2 * v_ + (1 - b2) * jnp.square(d.astype(jnp.float32)),
+            state["v"], mean_delta,
+        )
+        upd = jax.tree_util.tree_map(
+            lambda m_, v_: lr * m_ / (jnp.sqrt(v_) + eps), m, v
+        )
+        return upd, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def diloco_optimizer(lr: float = 0.7, momentum: float = 0.9) -> Optimizer:
+    """DiLoCo outer optimizer: Nesterov momentum over the mean delta."""
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params
+            ),
+        }
+
+    def update(mean_delta, state, params=None):
+        step = state["step"] + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, d: momentum * m + d.astype(jnp.float32),
+            state["mu"], mean_delta,
+        )
+        # Nesterov lookahead
+        upd = jax.tree_util.tree_map(
+            lambda m, d: lr * (momentum * m + d.astype(jnp.float32)),
+            mu, mean_delta,
+        )
+        return upd, {"step": step, "mu": mu}
+
+    return Optimizer(init, update)

@@ -1,0 +1,14 @@
+"""Distributed runtime: fault tolerance, stragglers, elastic scaling."""
+
+from .failure import FailureInjector, run_with_recovery
+from .stragglers import StragglerSimulator, straggler_mask
+from .elastic import ElasticSchedule, rescale_partition
+
+__all__ = [
+    "FailureInjector",
+    "run_with_recovery",
+    "StragglerSimulator",
+    "straggler_mask",
+    "ElasticSchedule",
+    "rescale_partition",
+]

@@ -1,0 +1,73 @@
+"""Elastic scaling: change device count / cohort size without changing the
+program.
+
+The paper's decoupling of *logical* partition size from *physical* devices is
+exactly what makes DrJAX elastic: a partition of n groups runs on any m | n
+devices. When a pod is lost (or gained):
+
+ 1. pick the new mesh from the surviving devices;
+ 2. (optionally) pick a new cohort size n' compatible with m';
+ 3. re-jit the same round function for the new (n', mesh) — the *model* and
+    *server state* are placement-free pytrees and transfer unchanged.
+
+No resharding of training state is required beyond what pjit does on the new
+mesh; client state is per-round (clients re-init from broadcast), so nothing
+is lost with the failed pod — the defining fault-tolerance advantage of
+MapReduce rounds over long-lived SPMD replicas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class ElasticSchedule:
+    """Cohort-size policy as the device pool grows/shrinks.
+
+    ``groups_per_device`` keeps per-device load constant (weak scaling, the
+    paper's Fig. 4 regime).
+    """
+
+    groups_per_device: int = 1
+
+    def cohort_size(self, num_devices: int) -> int:
+        return max(1, num_devices * self.groups_per_device)
+
+
+def rescale_partition(
+    round_data: dict, old_n: int, new_n: int
+) -> dict:
+    """Adapt a round's stacked cohort data from n to n' groups.
+
+    Shrink: drop the tail groups (they simply aren't sampled).
+    Grow: wrap-around repeat (callers normally just sample a bigger cohort).
+    """
+    def leaf(x):
+        if not hasattr(x, "shape") or x.ndim == 0 or x.shape[0] != old_n:
+            return x
+        if new_n <= old_n:
+            return x[:new_n]
+        reps = -(-new_n // old_n)
+        return np.concatenate([x] * reps, axis=0)[:new_n]
+
+    return jax.tree_util.tree_map(leaf, round_data)
+
+
+def available_mesh_shapes(num_devices: int,
+                          model_parallelism: int) -> List[Tuple[int, int]]:
+    """(data, model) mesh shapes for a (possibly degraded) device pool."""
+    shapes = []
+    if num_devices % model_parallelism == 0:
+        shapes.append((num_devices // model_parallelism, model_parallelism))
+    # fall back to smaller model-parallel groups if needed
+    mp = model_parallelism
+    while mp > 1 and not shapes:
+        mp //= 2
+        if num_devices % mp == 0:
+            shapes.append((num_devices // mp, mp))
+    return shapes

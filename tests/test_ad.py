@@ -1,0 +1,162 @@
+"""MapReduce AD tests (paper §2/§3/§5; Rush et al. 2023 closure property)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import core as drjax
+
+
+def loss(x, y):
+    return (x - y) ** 2
+
+
+def maml_loss(model, lr, task):
+    g = jax.grad(loss)(model, task)
+    return loss(model - lr * g, task)
+
+
+def make_parallel_maml(n):
+    @drjax.program(partition_size=n)
+    def parallel_maml_loss(model, lr, tasks):
+        model_b = drjax.broadcast(model)
+        lr_b = drjax.broadcast(lr)
+        losses = drjax.map_fn(maml_loss, (model_b, lr_b, tasks))
+        return drjax.reduce_mean(losses)
+
+    return parallel_maml_loss
+
+
+class TestClosure:
+    """The derivative of a DrJAX program is another DrJAX program."""
+
+    def test_forward_jaxpr_preserves_primitives_snippet5(self):
+        f = make_parallel_maml(3)
+        jxp = jax.make_jaxpr(f)(
+            jnp.float32(0.0), jnp.float32(0.1), jnp.zeros((3,), jnp.float32)
+        )
+        counts = drjax.count_primitives(jxp)
+        assert counts.get("drjax_broadcast", 0) == 2
+        assert counts.get("drjax_reduce_mean", 0) == 1
+
+    def test_grad_jaxpr_stays_in_primitive_set_snippet6(self):
+        f = make_parallel_maml(3)
+        jxp = jax.make_jaxpr(jax.grad(f))(
+            jnp.float32(0.0), jnp.float32(0.1), jnp.zeros((3,), jnp.float32)
+        )
+        counts = drjax.count_primitives(jxp)
+        # Snippet 6: grad introduces reduce_sum (transpose of broadcast) while
+        # keeping broadcast and reduce_mean.
+        assert counts.get("drjax_reduce_sum", 0) >= 1
+        assert counts.get("drjax_broadcast", 0) >= 1
+
+    def test_jacfwd_and_jacrev_agree(self):
+        f = make_parallel_maml(4)
+        args = (jnp.float32(0.3), jnp.float32(0.05), jnp.arange(4, dtype=jnp.float32))
+        fwd = jax.jacfwd(f)(*args)
+        rev = jax.jacrev(f)(*args)
+        np.testing.assert_allclose(fwd, rev, rtol=1e-5)
+
+
+class TestGradCorrectness:
+    def test_maml_grad_matches_numerical(self):
+        f = make_parallel_maml(3)
+        model, lr = jnp.float32(0.2), jnp.float32(0.1)
+        tasks = jnp.array([1.0, 2.0, 3.0], jnp.float32)
+        g = jax.grad(f)(model, lr, tasks)
+        eps = 1e-3
+        num = (f(model + eps, lr, tasks) - f(model - eps, lr, tasks)) / (2 * eps)
+        np.testing.assert_allclose(g, num, rtol=1e-2)
+
+    def test_grad_wrt_partitioned_input(self):
+        @drjax.program(partition_size=3)
+        def f(xs):
+            return drjax.reduce_sum(drjax.map_fn(lambda a: a**2, xs))
+
+        xs = jnp.array([1.0, 2.0, 3.0])
+        np.testing.assert_allclose(jax.grad(f)(xs), 2 * xs)
+
+    def test_grad_through_reduce_mean(self):
+        @drjax.program(partition_size=5)
+        def f(x):
+            return drjax.reduce_mean(drjax.broadcast(x) * 3.0)
+
+        np.testing.assert_allclose(jax.grad(f)(jnp.float32(1.0)), 3.0, rtol=1e-6)
+
+    def test_grad_through_weighted_mean_wrt_weights(self):
+        """Self-tuning reductions (paper §6): weights are learnable."""
+
+        @drjax.program(partition_size=3)
+        def f(w):
+            x = jnp.array([1.0, 2.0, 4.0])
+            return drjax.reduce_weighted_mean(x, jax.nn.softmax(w))
+
+        w = jnp.zeros((3,))
+        g = jax.grad(f)(w)
+        assert g.shape == (3,)
+        # moving weight towards group 2 (largest value) increases the mean
+        assert g[2] > 0 and g[0] < 0
+
+    def test_grad_reduce_max_subgradient(self):
+        @drjax.program(partition_size=4)
+        def f(xs):
+            return drjax.reduce_max(xs)
+
+        xs = jnp.array([1.0, 5.0, 3.0, 2.0])
+        g = jax.grad(f)(xs)
+        np.testing.assert_allclose(g, [0.0, 1.0, 0.0, 0.0])
+
+    def test_second_order(self):
+        @drjax.program(partition_size=3)
+        def f(x):
+            y = drjax.broadcast(x)
+            return drjax.reduce_sum(drjax.map_fn(lambda a: a**3, y))
+
+        # f(x) = 3 x^3, f''(x) = 18 x
+        h = jax.grad(jax.grad(f))(jnp.float32(2.0))
+        np.testing.assert_allclose(h, 36.0, rtol=1e-5)
+
+    @given(
+        n=st.integers(1, 8),
+        x=st.floats(-3, 3, allow_nan=False, width=32),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_broadcast_reduce_grad_property(self, n, x):
+        """grad of x -> reduce_sum(broadcast(x)^2) is 2 n x."""
+
+        @drjax.program(partition_size=n)
+        def f(v):
+            y = drjax.broadcast(v)
+            return drjax.reduce_sum(drjax.map_fn(lambda a: a * a, y))
+
+        g = jax.grad(f)(jnp.float32(x))
+        np.testing.assert_allclose(g, 2 * n * x, rtol=1e-4, atol=1e-4)
+
+
+class TestParallelMamlTraining:
+    def test_maml_training_reduces_loss(self):
+        """Paper Snippet 7: pairing jax.grad with an SGD step trains MAML."""
+        n = 8
+        f = make_parallel_maml(n)
+        tasks = jnp.linspace(-1.0, 1.0, n)
+        model = jnp.float32(3.0)
+        lr_inner = jnp.float32(0.05)
+        loss0 = f(model, lr_inner, tasks)
+        grad_fn = jax.jit(jax.grad(f))
+        for _ in range(50):
+            model = model - 0.1 * grad_fn(model, lr_inner, tasks)
+        loss1 = f(model, lr_inner, tasks)
+        assert loss1 < loss0
+
+    def test_hypergradient_on_inner_lr(self):
+        """Self-tuning: differentiate the MAML loss wrt the *inner* lr."""
+        n = 4
+        f = make_parallel_maml(n)
+        tasks = jnp.linspace(0.5, 2.0, n)
+        model = jnp.float32(0.0)
+        lr = jnp.float32(0.01)
+        dlr = jax.grad(f, argnums=1)(model, lr, tasks)
+        # larger inner lr moves the model closer to each task -> lower loss
+        assert dlr < 0

@@ -1,0 +1,243 @@
+"""Algorithm-layer tests: local SGD, FedSGD, DiLoCo, MAML, BTM, compression."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as drjax
+from repro import optim
+from repro.algorithms.btm import branch_train_merge
+from repro.algorithms.maml import make_parallel_maml
+from repro.algorithms.rounds import (
+    LocalSGDConfig,
+    make_fedsgd_round,
+    make_local_sgd_round,
+)
+from repro.compression import ErrorFeedback, int8_roundtrip, topk_sparsify
+from repro.data.grouped import GroupedCorpus, CohortSampler
+from repro.models import registry
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = registry.get_config("lm_350m").reduced()
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    loss_fn = functools.partial(registry.loss_fn, cfg)
+    return cfg, params, loss_fn
+
+
+def _round_data(cfg, n, steps, b, s, round_idx=0):
+    corpus = GroupedCorpus(vocab_size=cfg.vocab_size, num_groups=64)
+    sampler = CohortSampler(corpus, cohort_size=n)
+    d = sampler.round_batch(round_idx, steps, b, s)
+    return {"tokens": d["tokens"], "labels": d["labels"]}
+
+
+class TestLocalSGD:
+    def test_loss_decreases_over_rounds(self, tiny_lm):
+        cfg, params, loss_fn = tiny_lm
+        n, steps = 4, 2
+        fn = jax.jit(make_local_sgd_round(
+            loss_fn, optim.sgd(0.05), optim.fedavg_momentum(1.0),
+            LocalSGDConfig(partition_size=n, num_local_steps=steps),
+        ))
+        sstate = optim.fedavg_momentum(1.0).init(params)
+        losses = []
+        for r in range(6):
+            data = _round_data(cfg, n, steps, 2, 16, r)
+            params, sstate, m = fn(params, sstate, data)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+
+    def test_single_group_equals_sequential_sgd(self, tiny_lm):
+        """n=1 local SGD must equal plain SGD on the same batches (exactness
+        of the MapReduce formulation)."""
+        cfg, params, loss_fn = tiny_lm
+        steps = 3
+        data = _round_data(cfg, 1, steps, 2, 16)
+        fn = jax.jit(make_local_sgd_round(
+            loss_fn, optim.sgd(0.1), optim.fedavg_momentum(1.0),
+            LocalSGDConfig(partition_size=1, num_local_steps=steps),
+        ))
+        sstate = optim.fedavg_momentum(1.0).init(params)
+        p_mr, _, _ = fn(params, sstate, data)
+
+        # manual sequential SGD
+        p = params
+        for t in range(steps):
+            batch = {"tokens": data["tokens"][0, t], "labels": data["labels"][0, t]}
+            g = jax.grad(loss_fn)(p, batch)
+            p = jax.tree_util.tree_map(
+                lambda w, gw: (w.astype(jnp.float32)
+                               - 0.1 * gw.astype(jnp.float32)).astype(w.dtype),
+                p, g)
+        for a, b in zip(jax.tree_util.tree_leaves(p_mr),
+                        jax.tree_util.tree_leaves(p)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=2e-4, atol=2e-4,
+            )
+
+    def test_diloco_server_optimizer(self, tiny_lm):
+        cfg, params, loss_fn = tiny_lm
+        n, steps = 4, 4
+        server = optim.diloco_optimizer(0.7, 0.9)
+        fn = jax.jit(make_local_sgd_round(
+            loss_fn, optim.sgd(0.05), server,
+            LocalSGDConfig(partition_size=n, num_local_steps=steps),
+        ))
+        sstate = server.init(params)
+        losses = []
+        for r in range(5):
+            data = _round_data(cfg, n, steps, 2, 16, r)
+            params, sstate, m = fn(params, sstate, data)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+        assert int(sstate["step"]) == 5
+
+    def test_grad_clip_path(self, tiny_lm):
+        cfg, params, loss_fn = tiny_lm
+        fn = jax.jit(make_local_sgd_round(
+            loss_fn, optim.sgd(0.05), optim.fedavg_momentum(1.0),
+            LocalSGDConfig(partition_size=2, num_local_steps=1, grad_clip=0.5),
+        ))
+        sstate = optim.fedavg_momentum(1.0).init(params)
+        data = _round_data(cfg, 2, 1, 2, 16)
+        p2, _, m = fn(params, sstate, data)
+        assert np.isfinite(m["loss"])
+
+
+class TestFedSGD:
+    def test_basic_round(self, tiny_lm):
+        cfg, params, loss_fn = tiny_lm
+        fn = jax.jit(make_fedsgd_round(
+            loss_fn, optim.fedadam(1e-2),
+            LocalSGDConfig(partition_size=4, num_local_steps=1),
+        ))
+        sstate = optim.fedadam(1e-2).init(params)
+        data = _round_data(cfg, 4, 1, 2, 16)
+        batches = {"tokens": data["tokens"][:, 0], "labels": data["labels"][:, 0]}
+        p2, s2, m = fn(params, sstate, batches)
+        assert np.isfinite(m["loss"])
+
+    def test_learned_weights_hypergrad(self, tiny_lm):
+        """Self-tuning reduction: gradient flows to the reduction weights
+        through MapReduce AD (paper §6)."""
+        cfg, params, loss_fn = tiny_lm
+        n = 4
+        fn = make_fedsgd_round(
+            loss_fn, optim.fedavg_momentum(1.0),
+            LocalSGDConfig(partition_size=n, num_local_steps=1),
+            learned_weights=True,
+        )
+        data = _round_data(cfg, n, 1, 2, 16)
+        batches = {"tokens": data["tokens"][:, 0], "labels": data["labels"][:, 0]}
+        sstate = optim.fedavg_momentum(1.0).init(params)
+
+        def loss_of_weights(w):
+            _, _, m = fn(params, sstate, batches, w)
+            return m["loss"]
+
+        g = jax.grad(loss_of_weights)(jnp.zeros((n,)))
+        assert g.shape == (n,)
+        assert np.any(np.asarray(g) != 0.0)
+
+
+class TestMAML:
+    def test_maml_trains(self):
+        # scalar quadratic "model": loss = (w - target)^2
+        def loss_fn(w, batch):
+            return jnp.mean((w - batch) ** 2)
+
+        maml_loss, train_step = make_parallel_maml(
+            loss_fn, partition_size=4, inner_lr=0.1, inner_steps=1
+        )
+        tasks = {
+            "support": jnp.array([1.0, 2.0, 3.0, 4.0]),
+            "query": jnp.array([1.5, 2.5, 3.5, 4.5]),
+        }
+        w = jnp.float32(0.0)
+        l0 = maml_loss(w, tasks)
+        for _ in range(40):
+            w, _ = train_step(w, tasks, outer_lr=0.1)
+        l1 = maml_loss(w, tasks)
+        assert l1 < l0
+
+    def test_maml_jaxpr_closure(self):
+        def loss_fn(w, batch):
+            return jnp.mean((w - batch) ** 2)
+
+        maml_loss, _ = make_parallel_maml(loss_fn, partition_size=3)
+        tasks = {"support": jnp.zeros(3), "query": jnp.ones(3)}
+        counts = drjax.count_primitives(
+            jax.make_jaxpr(jax.grad(maml_loss))(jnp.float32(0.0), tasks)
+        )
+        assert "drjax_reduce_sum" in counts  # grad introduces the transpose
+
+
+class TestBTM:
+    def test_branch_train_merge(self, tiny_lm):
+        cfg, params, loss_fn = tiny_lm
+        n, steps = 3, 2
+        btm = jax.jit(branch_train_merge(
+            loss_fn, optim.sgd(0.05), partition_size=n, train_steps=steps,
+        ))
+        data = _round_data(cfg, n, steps, 2, 16)
+        merged, metrics = btm(params, data)
+        assert np.isfinite(metrics["mean_final_loss"])
+        assert np.isfinite(metrics["max_final_loss"])
+        assert metrics["max_final_loss"] >= metrics["mean_final_loss"] - 1e-6
+        # merged params still produce finite loss
+        batch = {"tokens": data["tokens"][0, 0], "labels": data["labels"][0, 0]}
+        assert np.isfinite(loss_fn(merged, batch))
+
+
+class TestCompression:
+    def test_int8_roundtrip_small_error(self):
+        tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (64, 32)),
+                "b": jax.random.normal(jax.random.PRNGKey(1), (100,))}
+        back = int8_roundtrip(tree)
+        for k in tree:
+            x, y = np.asarray(tree[k]), np.asarray(back[k])
+            cos = (x * y).sum() / (np.linalg.norm(x) * np.linalg.norm(y))
+            assert cos > 0.999, k
+
+    def test_topk_keeps_largest(self):
+        x = {"w": jnp.array([0.1, -5.0, 0.2, 3.0, -0.05])}
+        sp = topk_sparsify(x, fraction=0.4)
+        np.testing.assert_allclose(sp["w"], [0, -5.0, 0, 3.0, 0])
+
+    def test_error_feedback_reduces_bias(self):
+        tree = {"w": jax.random.normal(jax.random.PRNGKey(2), (256,))}
+        residual = ErrorFeedback.init(tree)
+        total_sent = jax.tree_util.tree_map(jnp.zeros_like, tree)
+        for _ in range(20):
+            compressed, residual = ErrorFeedback.compress(
+                tree, residual, topk_sparsify, 0.1
+            )
+            total_sent = jax.tree_util.tree_map(
+                lambda t, c: t + c, total_sent, compressed
+            )
+        # over many rounds, average sent ≈ true value (error feedback works)
+        avg = np.asarray(total_sent["w"]) / 20
+        x = np.asarray(tree["w"])
+        cos = (x * avg).sum() / (np.linalg.norm(x) * np.linalg.norm(avg))
+        assert cos > 0.95
+
+    def test_compressed_round_still_trains(self, tiny_lm):
+        cfg, params, loss_fn = tiny_lm
+        fn = jax.jit(make_local_sgd_round(
+            loss_fn, optim.sgd(0.05), optim.fedavg_momentum(1.0),
+            LocalSGDConfig(partition_size=2, num_local_steps=2,
+                           compression="int8"),
+        ))
+        sstate = optim.fedavg_momentum(1.0).init(params)
+        losses = []
+        for r in range(4):
+            data = _round_data(cfg, 2, 2, 2, 16, r)
+            params, sstate, m = fn(params, sstate, data)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]

@@ -1,0 +1,99 @@
+"""Checkpoint manager tests: atomicity, integrity, async, retention, resume."""
+
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "w": jax.random.normal(k, (8, 4)),
+        "nested": {"b": jnp.arange(5, dtype=jnp.float32),
+                   "step": jnp.int32(7)},
+    }
+
+
+class TestRoundTrip:
+    def test_save_restore(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        tree = _tree()
+        mgr.save(3, tree, metadata={"lr": 0.1})
+        restored, meta = mgr.restore(3, tree)
+        assert meta == {"lr": 0.1}
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_bf16_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        tree = {"w": jnp.ones((4, 4), jnp.bfloat16) * 1.5}
+        mgr.save(1, tree)
+        restored, _ = mgr.restore(1, tree)
+        assert restored["w"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(restored["w"], np.float32),
+            np.asarray(tree["w"], np.float32),
+        )
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        tree = _tree()
+        mgr.save(1, tree, blocking=False)
+        mgr.wait()
+        assert mgr.latest_step() == 1
+
+    def test_restore_latest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        t1, t2 = _tree(1), _tree(2)
+        mgr.save(1, t1)
+        mgr.save(5, t2)
+        step, restored, _ = mgr.restore_latest(t1)
+        assert step == 5
+        np.testing.assert_array_equal(
+            np.asarray(restored["w"]), np.asarray(t2["w"])
+        )
+
+
+class TestFaultModes:
+    def test_integrity_check_detects_corruption(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        tree = _tree()
+        mgr.save(2, tree)
+        # corrupt the arrays file
+        d = os.path.join(str(tmp_path), "step_000000002")
+        path = os.path.join(d, "arrays.npz")
+        data = dict(np.load(path))
+        data["leaf_00000"] = data["leaf_00000"] + 1.0
+        np.savez(path, **data)
+        with pytest.raises(IOError, match="corruption"):
+            mgr.restore(2, tree)
+
+    def test_restore_latest_skips_torn_checkpoint(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        tree = _tree()
+        mgr.save(1, tree)
+        mgr.save(2, tree)
+        # tear checkpoint 2 (remove its arrays)
+        os.remove(os.path.join(str(tmp_path), "step_000000002", "arrays.npz"))
+        step, _, _ = mgr.restore_latest(tree)
+        assert step == 1
+
+    def test_retention_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_last_n=2)
+        tree = _tree()
+        for s in (1, 2, 3, 4):
+            mgr.save(s, tree)
+        steps = sorted(mgr._complete_steps())
+        assert steps == [3, 4]
+
+    def test_no_checkpoint_returns_none(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        assert mgr.restore_latest(_tree()) is None
