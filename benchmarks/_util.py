@@ -18,6 +18,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
 import json, time
 import jax, jax.numpy as jnp
 import numpy as np
+from repro import compat
 from repro import core as drjax
 """
 

@@ -34,7 +34,7 @@ t0 = time.time()
 lowered = jax.jit(round_fn).lower(params, sstate, data)
 compiled = lowered.compile()
 compile_s = time.time() - t0
-cost = compiled.cost_analysis()
+cost = compat.cost_analysis(compiled)
 mem = compiled.memory_analysis()
 # wall-clock for one round (all devices emulated on one core: total work)
 import numpy as _np

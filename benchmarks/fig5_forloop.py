@@ -70,7 +70,7 @@ else:
 t0 = time.time()
 compiled = jax.jit(fn).lower(*lower_args).compile()
 compile_s = time.time() - t0
-cost = compiled.cost_analysis()
+cost = compat.cost_analysis(compiled)
 t0 = time.time()
 r = jax.jit(fn)(*lower_args)
 jax.block_until_ready(r[2]["loss"])

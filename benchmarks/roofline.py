@@ -1,5 +1,10 @@
 """Roofline table: aggregates the dry-run results (launch/dryrun.py) into
-the per-(arch × shape × mesh) three-term roofline rows for EXPERIMENTS.md."""
+the per-(arch × shape × mesh) three-term roofline rows for EXPERIMENTS.md.
+
+The per-cell costs in those artifacts are produced by
+``repro.launch.hlo_cost`` on top of ``repro.compat.cost_analysis`` (the raw
+compiled-cost shape differs across JAX versions); this module only formats
+the normalized numbers."""
 
 from __future__ import annotations
 

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 test suite in one command:  scripts/run_tests.sh [pytest args]
+#
+#   scripts/run_tests.sh                 # full suite
+#   scripts/run_tests.sh -m 'not slow'   # fast run (skips multi-device tests)
+#
+# REPRO_HOST_DEVICES (4 or 8, default 8) sets the fake host-device count for
+# the multi-device worker that tests/conftest.py spawns (it exports
+# XLA_FLAGS=--xla_force_host_platform_device_count=$REPRO_HOST_DEVICES into
+# that worker's environment). XLA_FLAGS is deliberately NOT exported here:
+# the main pytest process must keep the default single host device — only
+# the session worker forces the count.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export REPRO_HOST_DEVICES="${REPRO_HOST_DEVICES:-8}"
+
+exec python -m pytest -q "$@"

@@ -1,0 +1,49 @@
+"""JAX version-portability layer.
+
+One subsystem owns every JAX-version-sensitive surface the repo touches:
+mesh construction, axis-type handling, ambient-mesh contexts, compiled-cost
+analysis, and sharding-object helpers. The repo rule (see ROADMAP.md):
+
+    No direct ``jax.sharding.AxisType`` / ``jax.make_mesh`` keyword probing /
+    ``Compiled.cost_analysis`` shape handling outside ``repro/compat``.
+
+Callers branch on capabilities (``compat.has("mesh_axis_types")``), never on
+``jax.__version__``. Supported range: JAX 0.4.3x (list-shaped cost analysis,
+no AxisType, ``with mesh:`` ambient contexts) through current releases
+(dict cost analysis, AxisType, ``jax.set_mesh``); on older versions
+new-API-only features degrade to their implicit equivalents.
+"""
+
+from .cost import (
+    cost_analysis,
+    cost_bytes_accessed,
+    cost_flops,
+    normalize_cost_analysis,
+)
+from .meshes import axis_type, make_mesh, set_mesh, shard_map
+from .probes import capabilities, has, jax_version, reset_cache
+from .shardings import (
+    named_sharding,
+    partition_spec,
+    positional_sharding,
+    replicated_sharding,
+)
+
+__all__ = [
+    "axis_type",
+    "capabilities",
+    "cost_analysis",
+    "cost_bytes_accessed",
+    "cost_flops",
+    "has",
+    "jax_version",
+    "make_mesh",
+    "named_sharding",
+    "normalize_cost_analysis",
+    "partition_spec",
+    "positional_sharding",
+    "replicated_sharding",
+    "reset_cache",
+    "set_mesh",
+    "shard_map",
+]

@@ -1,0 +1,58 @@
+"""Version-portable compiled-program cost analysis.
+
+``Compiled.cost_analysis`` changed shape across JAX versions: older releases
+return a list with one properties-dict per HLO module, newer ones return the
+dict directly. Everything in this repo reads costs through
+:func:`cost_analysis`, which always yields a flat ``{metric: value}`` dict.
+"""
+
+from __future__ import annotations
+
+from numbers import Number
+from typing import Any, Dict
+
+
+def normalize_cost_analysis(raw: Any) -> Dict[str, Any]:
+    """Normalize a raw ``Compiled.cost_analysis`` result to one flat dict.
+
+    dict -> copied as-is; list/tuple of dicts -> the single element, or a
+    sum of numeric metrics when there are several modules; anything else
+    (None, unexpected types) -> {}.
+    """
+    if isinstance(raw, dict):
+        return dict(raw)
+    if isinstance(raw, (list, tuple)):
+        dicts = [d for d in raw if isinstance(d, dict)]
+        if not dicts:
+            return {}
+        if len(dicts) == 1:
+            return dict(dicts[0])
+        merged: Dict[str, Any] = {}
+        for d in dicts:
+            for k, v in d.items():
+                if isinstance(v, Number) and isinstance(
+                    merged.get(k, 0.0), Number
+                ):
+                    merged[k] = merged.get(k, 0.0) + v
+                else:
+                    merged.setdefault(k, v)
+        return merged
+    return {}
+
+
+def cost_analysis(compiled) -> Dict[str, Any]:
+    """Flat cost dict for a compiled computation; {} when unavailable
+    (some backends/versions raise instead of returning costs)."""
+    try:
+        raw = compiled.cost_analysis()
+    except Exception:  # noqa: BLE001 - unsupported backend == no costs
+        return {}
+    return normalize_cost_analysis(raw)
+
+
+def cost_flops(compiled) -> float:
+    return float(cost_analysis(compiled).get("flops", 0.0))
+
+
+def cost_bytes_accessed(compiled) -> float:
+    return float(cost_analysis(compiled).get("bytes accessed", 0.0))

@@ -1,0 +1,96 @@
+"""Capability probes for version-sensitive JAX surfaces.
+
+Callers branch on *features* (``compat.has("mesh_axis_types")``), never on
+``jax.__version__`` strings. A probe inspects the installed ``jax`` module
+lazily the first time a feature is asked for and the verdict is cached;
+``reset_cache()`` clears the cache so tests can monkeypatch ``jax`` to
+simulate a newer/older API surface (see tests/test_compat.py).
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Callable, Dict
+
+import jax
+
+
+def _probe_make_mesh() -> bool:
+    """``jax.make_mesh`` (added 0.4.35; before that: mesh_utils + Mesh)."""
+    return callable(getattr(jax, "make_mesh", None))
+
+
+def _probe_axis_type_enum() -> bool:
+    """``jax.sharding.AxisType`` (the Auto/Explicit/Manual enum, 0.5+)."""
+    return hasattr(jax.sharding, "AxisType")
+
+
+def _probe_mesh_axis_types() -> bool:
+    """``jax.make_mesh(..., axis_types=...)`` keyword support."""
+    if not (_probe_make_mesh() and _probe_axis_type_enum()):
+        return False
+    try:
+        sig = inspect.signature(jax.make_mesh)
+    except (TypeError, ValueError):
+        return False
+    return "axis_types" in sig.parameters
+
+
+def _probe_set_mesh() -> bool:
+    """``jax.set_mesh`` ambient-mesh context (0.6+)."""
+    return callable(getattr(jax, "set_mesh", None))
+
+
+def _probe_use_mesh() -> bool:
+    """``jax.sharding.use_mesh`` ambient-mesh context (0.5.x)."""
+    return callable(getattr(jax.sharding, "use_mesh", None))
+
+
+def _probe_positional_sharding() -> bool:
+    """``jax.sharding.PositionalSharding`` (removed in newer JAX)."""
+    return hasattr(jax.sharding, "PositionalSharding")
+
+
+_PROBES: Dict[str, Callable[[], bool]] = {
+    "make_mesh": _probe_make_mesh,
+    "axis_type_enum": _probe_axis_type_enum,
+    "mesh_axis_types": _probe_mesh_axis_types,
+    "set_mesh": _probe_set_mesh,
+    "use_mesh": _probe_use_mesh,
+    "positional_sharding": _probe_positional_sharding,
+}
+
+_CACHE: Dict[str, bool] = {}
+
+
+def has(feature: str) -> bool:
+    """True iff the installed JAX supports `feature` (see _PROBES keys)."""
+    if feature not in _PROBES:
+        raise KeyError(
+            f"unknown compat feature {feature!r}; known: {sorted(_PROBES)}"
+        )
+    if feature not in _CACHE:
+        _CACHE[feature] = bool(_PROBES[feature]())
+    return _CACHE[feature]
+
+
+def capabilities() -> Dict[str, bool]:
+    """Full feature -> supported map for the installed JAX."""
+    return {name: has(name) for name in sorted(_PROBES)}
+
+
+def reset_cache() -> None:
+    """Forget cached probe verdicts (tests monkeypatch jax, then reset)."""
+    _CACHE.clear()
+
+
+def jax_version() -> tuple:
+    """Installed JAX version as an int tuple, for diagnostics only —
+    feature decisions must go through ``has``."""
+    parts = []
+    for p in jax.__version__.split("."):
+        digits = "".join(ch for ch in p if ch.isdigit())
+        if not digits:
+            break
+        parts.append(int(digits))
+    return tuple(parts)

@@ -1,0 +1,43 @@
+"""Sharding-object helpers, kept in one place so call sites survive JAX's
+ongoing sharding-API churn (``PositionalSharding`` removal, ``NamedSharding``
+constructor moves)."""
+
+from __future__ import annotations
+
+from typing import Sequence, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from .probes import has
+
+SpecLike = Union[PartitionSpec, Sequence, None]
+
+
+def partition_spec(*axes) -> PartitionSpec:
+    return PartitionSpec(*axes)
+
+
+def named_sharding(mesh: jax.sharding.Mesh, spec: SpecLike = None) -> NamedSharding:
+    """NamedSharding from a PartitionSpec or a plain axis sequence."""
+    if spec is None:
+        spec = PartitionSpec()
+    elif not isinstance(spec, PartitionSpec):
+        spec = PartitionSpec(*spec)
+    return NamedSharding(mesh, spec)
+
+
+def replicated_sharding(mesh: jax.sharding.Mesh) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def positional_sharding(devices):
+    """``jax.sharding.PositionalSharding`` where it still exists; newer JAX
+    removed it in favor of NamedSharding, so callers must gate on
+    ``compat.has("positional_sharding")`` and provide a mesh-based path."""
+    if not has("positional_sharding"):
+        raise NotImplementedError(
+            "this JAX has no PositionalSharding; build a mesh and use "
+            "compat.named_sharding instead"
+        )
+    return jax.sharding.PositionalSharding(devices)

@@ -35,7 +35,8 @@ class PlacementContext:
         sharded over, e.g. ``"data"`` or ``("pod", "data")``. ``None`` means
         no sharding constraint is emitted (DrJAX-NS).
       mesh: optional concrete mesh. If ``None``, sharding constraints use the
-        ambient mesh (``jax.sharding.use_mesh`` / ``with mesh:``).
+        ambient mesh (``repro.compat.set_mesh``, which picks the right
+        mechanism for the installed JAX version).
       use_sharding_annotations: master switch for static + dynamic sharding
         annotations. ``False`` == DrJAX-NS (paper Fig. 6 ablation).
       use_spmd_axis_name: whether ``map_fn`` passes ``spmd_axis_name`` to

@@ -17,7 +17,9 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 from . import placement as placement_lib
 
@@ -50,7 +52,9 @@ def constrain_partitioned(x, ctx: placement_lib.PlacementContext):
     spec = partition_spec(ctx, x.ndim)
     if spec is None:
         return x
-    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+    return jax.lax.with_sharding_constraint(
+        x, compat.named_sharding(ctx.mesh, spec)
+    )
 
 
 def constrain_replicated(x, ctx: placement_lib.PlacementContext):
@@ -62,7 +66,7 @@ def constrain_replicated(x, ctx: placement_lib.PlacementContext):
     if not axes or x.ndim == 0:
         return x
     return jax.lax.with_sharding_constraint(
-        x, NamedSharding(ctx.mesh, P(*([_U] * x.ndim)))
+        x, compat.named_sharding(ctx.mesh, P(*([_U] * x.ndim)))
     )
 
 

@@ -1,6 +1,6 @@
 """Analytic roofline model per (arch × cell × mesh).
 
-Why this exists: XLA's ``cost_analysis()`` on a compiled module counts each
+Why this exists: XLA's cost analysis on a compiled module counts each
 ``while``-loop body ONCE, so any scan-over-layers program under-reports
 FLOPs/bytes by ~num_layers×, and collectives inside the loop likewise. The
 dry-run therefore records BOTH: (a) the compiled HLO evidence (which
@@ -28,12 +28,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
+from repro.launch.hlo_cost import HBM_BW, LINK_BW, PEAK_FLOPS
 from repro.models import registry
 from repro.models.blocks import layer_kinds
-
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-LINK_BW = 50e9
 
 
 @dataclasses.dataclass

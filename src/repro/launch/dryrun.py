@@ -23,17 +23,22 @@ Usage:
 
 import argparse
 import json
-import re
 import time
 import traceback
-from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
+from repro import compat
 from repro.launch import analytic
 from repro.launch import mesh as mesh_lib
 from repro.launch import steps as steps_lib
+from repro.launch.hlo_cost import (
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    parse_collectives,
+    roofline_terms,
+)
 from repro.models import registry
 
 RESULTS_DIR = os.path.join(
@@ -41,97 +46,8 @@ RESULTS_DIR = os.path.join(
         os.path.abspath(__file__))))), "benchmarks", "dryrun_results"
 )
 
-# TPU v5e constants (per task card)
-PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
-HBM_BW = 819e9  # bytes/s per chip
-LINK_BW = 50e9  # bytes/s per ICI link
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
-    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4,
-    "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
-}
-
-_COLLECTIVES = (
-    "all-gather",
-    "all-reduce",
-    "reduce-scatter",
-    "all-to-all",
-    "collective-permute",
-)
-
-_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
-
-
-def _shape_bytes(m) -> int:
-    dt, dims = m.group(1), m.group(2)
-    size = 1
-    if dims:
-        for d in dims.split(","):
-            size *= int(d)
-    base = next((v for k, v in _DTYPE_BYTES.items() if dt.startswith(k)), 4)
-    return size * base
-
-
-_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-
-
-def _group_size(line: str) -> int:
-    m = _GROUPS_IOTA_RE.search(line)  # iota format [num_groups,group_size]
-    if m:
-        return max(int(m.group(2)), 1)
-    m = _GROUPS_RE.search(line)  # explicit {{0,1,...},...}: first group size
-    if m:
-        return max(len(m.group(1).split(",")), 1)
-    return 1
-
-
-def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
-    """Per collective kind: op count + operand bytes (per-device program).
-
-    ``compiled.as_text()`` call sites reference operands by name only, so we
-    read the *output* shape (on the lhs) and convert to operand size with the
-    replica-group size g: all-gather operand = out/g; reduce-scatter operand
-    = out*g; all-reduce / all-to-all / collective-permute operand = out.
-    """
-    stats = {k: {"count": 0, "operand_bytes": 0.0} for k in _COLLECTIVES}
-    for line in hlo_text.splitlines():
-        s = line.strip()
-        # NOTE: tuple output shapes may contain /*index=N*/ comments, so the
-        # span between "=" and the op name must allow "=" characters.
-        mop = re.search(
-            r"=\s+.*?\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
-            r"collective-permute)(-start|-done)?\(", s)
-        if not mop or mop.group(2) == "-done":
-            continue
-        kind = mop.group(1)
-        out_bytes = sum(
-            _shape_bytes(m) for m in _SHAPE_RE.finditer(mop.group(0))
-        )
-        g = _group_size(s)
-        if kind == "all-gather":
-            operand = out_bytes / g
-        elif kind == "reduce-scatter":
-            operand = out_bytes * g
-        else:
-            operand = out_bytes
-        stats[kind]["count"] += 1
-        stats[kind]["operand_bytes"] += operand
-    return {k: v for k, v in stats.items() if v["count"]}
-
-
 def mesh_kind_is_multi(chips: int) -> bool:
     return chips == 512
-
-
-def roofline_terms(flops: float, bytes_accessed: float,
-                   collective_bytes: float) -> Dict[str, float]:
-    return {
-        "compute_s": flops / PEAK_FLOPS,
-        "memory_s": bytes_accessed / HBM_BW,
-        "collective_s": collective_bytes / LINK_BW,
-    }
 
 
 def model_flops(cfg, kind: str, batch: int, seq: int) -> float:
@@ -234,7 +150,7 @@ def run_cell(arch: str, cell: str, mesh_kind: str = "single",
         t_compile = time.time() - t0
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = compat.cost_analysis(compiled)
         hlo = compiled.as_text()
         coll = parse_collectives(hlo)
         coll_bytes = sum(v["operand_bytes"] for v in coll.values())

@@ -3,6 +3,10 @@
 Defined as FUNCTIONS (never module-level constants) so importing this module
 never touches JAX device state — the dry-run driver must set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* first init.
+
+All construction goes through ``repro.compat`` so the same meshes build on
+any supported JAX version (axis types are applied only where the API has
+them; older versions have the equivalent Auto-only semantics).
 """
 
 from __future__ import annotations
@@ -11,20 +15,18 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16×16 single-pod (data, model) or 2×16×16 (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> jax.sharding.Mesh:
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1) -> Optional[jax.sharding.Mesh]:

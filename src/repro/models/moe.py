@@ -61,6 +61,8 @@ def _combine(cfg, eout, combine, out_shape):
         import jax
         from jax.sharding import PartitionSpec as P
 
+        from repro import compat
+
         mesh = current_mesh()
         batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
         bspec = batch if len(batch) > 1 else (batch[0] if batch else None)
@@ -75,13 +77,13 @@ def _combine(cfg, eout, combine, out_shape):
             out = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
             return out.astype(eo.dtype)
 
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             local,
             mesh=mesh,
             in_specs=(P(bspec, "model", None, None),
                       P(bspec, None, "model", None)),
             out_specs=P(bspec, None, None),
-            check_vma=False,
+            check=False,
         )
         return fn(eout, combine).reshape(b, s, d)
     out = jnp.einsum("gecd,gtec->gtd", eout, combine)

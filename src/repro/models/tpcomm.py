@@ -16,9 +16,10 @@ all-reduce → ≈ 3.9× fewer bytes at m=16. Cost: m× dequant-add flops
 (negligible vs the matmul) and bounded quantization error on *partial sums*
 (error ≤ absmax/254 per row per shard; validated in tests, cosine > 0.999).
 
-Implemented with ``jax.shard_map`` so the collective is explicit in the
-lowered HLO — the dry-run's collective parser sees ``all-gather`` ops with
-``s8`` operands, which is the measurement used in EXPERIMENTS.md §Perf.
+Implemented with shard_map (via ``repro.compat``, which picks the right API
+across JAX versions) so the collective is explicit in the lowered HLO — the
+dry-run's collective parser sees ``all-gather`` ops with ``s8`` operands,
+which is the measurement used in EXPERIMENTS.md §Perf.
 """
 
 from __future__ import annotations
@@ -26,6 +27,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 from . import partitioning
 
@@ -71,12 +74,12 @@ def int8_matmul_reduce(x, w, *, axis_name: str = "model",
         out = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
         return out.astype(out_dtype)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(bspec, axis_name), P(axis_name, None)),
         out_specs=P(bspec, None),
-        check_vma=False,
+        check=False,
     )
     return fn(x, w)
 

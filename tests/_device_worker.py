@@ -1,0 +1,59 @@
+"""Persistent multi-device script runner (driven by tests/conftest.py).
+
+The parent launches this with ``XLA_FLAGS=--xla_force_host_platform_device_
+count=N`` in the environment; JAX locks the device count at first init, so
+the whole point of this process is to pay interpreter startup + jax import +
+compilation-cache warmup ONCE per test session instead of once per test.
+
+Protocol (JSON lines, one request -> one response):
+  request:  {"src": "<python source>"}
+  response: {"ok": bool, "stdout": "<captured prints>", "error": "<traceback>"}
+
+Each script runs under ``exec`` with a fresh globals dict (no state leaks
+between tests) but a shared ``sys.modules`` (imports after the first script
+are instant). Printed output is captured and returned, never written to the
+protocol channel.
+"""
+
+import contextlib
+import io
+import json
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    # The JSON protocol owns a private dup of the original stdout fd; fd 1
+    # itself is repointed at stderr so fd-level writes from exec'd scripts
+    # (nested subprocesses, native XLA logging) land in the parent's stderr
+    # drain instead of desyncing the protocol channel. Python-level prints
+    # are still captured per-script via redirect_stdout below.
+    stdout = os.fdopen(os.dup(sys.stdout.fileno()), "w", buffering=1)
+    os.dup2(sys.stderr.fileno(), sys.stdout.fileno())
+    stdin = sys.stdin
+    while True:
+        line = stdin.readline()
+        if not line:
+            return
+        line = line.strip()
+        if not line:
+            continue
+        req = json.loads(line)
+        buf = io.StringIO()
+        resp = {"ok": True, "error": ""}
+        try:
+            code = compile(req["src"], "<device-pool>", "exec")
+            with contextlib.redirect_stdout(buf):
+                exec(code, {"__name__": "__device_pool__"})
+        except KeyboardInterrupt:
+            raise
+        except BaseException:  # noqa: BLE001 - report everything to the parent
+            resp = {"ok": False, "error": traceback.format_exc()}
+        resp["stdout"] = buf.getvalue()
+        stdout.write(json.dumps(resp) + "\n")
+        stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Optional-hypothesis shim.
+
+``hypothesis`` is a property-testing extra, not a runtime dependency. Test
+modules that mix property tests with plain unit tests import ``given`` /
+``settings`` / ``st`` from here: with hypothesis installed this module is a
+passthrough; without it, each ``@given`` test skips itself at call time via
+``pytest.importorskip("hypothesis")`` while the plain tests (including the
+deterministic smoke variants of the key identities) keep running.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies`` at decoration time; any
+        attribute access or call returns itself, so strategy expressions in
+        ``@given(...)`` arguments evaluate without hypothesis."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # *args-only signature: pytest resolves no fixtures from it, and
+            # it accepts ``self`` when the test lives in a class.
+            def skip_without_hypothesis(*a, **k):
+                pytest.importorskip("hypothesis")
+
+            skip_without_hypothesis.__name__ = getattr(
+                fn, "__name__", "property_test"
+            )
+            skip_without_hypothesis.__doc__ = fn.__doc__
+            return skip_without_hypothesis
+
+        return deco

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro import core as drjax
 
@@ -125,6 +125,18 @@ class TestGradCorrectness:
     @settings(max_examples=20, deadline=None)
     def test_broadcast_reduce_grad_property(self, n, x):
         """grad of x -> reduce_sum(broadcast(x)^2) is 2 n x."""
+
+        @drjax.program(partition_size=n)
+        def f(v):
+            y = drjax.broadcast(v)
+            return drjax.reduce_sum(drjax.map_fn(lambda a: a * a, y))
+
+        g = jax.grad(f)(jnp.float32(x))
+        np.testing.assert_allclose(g, 2 * n * x, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("n,x", [(1, 0.5), (4, -2.0), (8, 3.0)])
+    def test_broadcast_reduce_grad_smoke(self, n, x):
+        """Deterministic slice of the property above (runs without hypothesis)."""
 
         @drjax.program(partition_size=n)
         def f(v):

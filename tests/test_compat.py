@@ -1,0 +1,263 @@
+"""Compat-layer tests.
+
+Two halves: (a) the layer works against the *installed* JAX (whatever
+version the environment has), and (b) a monkeypatched new-API present /
+absent matrix pins the branch each probe selects, so a JAX upgrade or
+downgrade can't silently flip behavior without a test noticing.
+"""
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.compat import probes as probes_lib
+
+
+@pytest.fixture(autouse=True)
+def _fresh_probe_cache():
+    """Probe verdicts are cached; tests that monkeypatch jax must re-probe."""
+    compat.reset_cache()
+    yield
+    compat.reset_cache()
+
+
+class TestOnInstalledJax:
+    def test_capabilities_are_booleans(self):
+        caps = compat.capabilities()
+        assert caps, "no probes registered"
+        assert all(isinstance(v, bool) for v in caps.values())
+
+    def test_unknown_feature_raises(self):
+        with pytest.raises(KeyError, match="unknown compat feature"):
+            compat.has("warp_drive")
+
+    def test_jax_version_tuple(self):
+        v = compat.jax_version()
+        assert isinstance(v, tuple) and len(v) >= 2
+        assert all(isinstance(p, int) for p in v)
+
+    def test_make_mesh_single_device(self):
+        mesh = compat.make_mesh((1,), ("data",))
+        assert mesh.axis_names == ("data",)
+        assert mesh.devices.shape == (1,)
+
+    def test_make_mesh_axis_type_request_is_portable(self):
+        # "auto" must build everywhere: applied where AxisType exists,
+        # dropped (with identical semantics) where it doesn't.
+        mesh = compat.make_mesh((1,), ("data",), axis_types="auto")
+        assert mesh.shape["data"] == 1
+
+    def test_axis_type_rejects_unknown_kind(self):
+        with pytest.raises(ValueError, match="unknown axis type"):
+            compat.axis_type("automatic")
+
+    def test_set_mesh_usable_as_ambient_context(self):
+        mesh = compat.make_mesh((1,), ("data",))
+        with compat.set_mesh(mesh) as active:
+            assert active is mesh
+            out = jax.jit(lambda x: x * 2)(jnp.ones((4,)))
+        np.testing.assert_allclose(out, 2.0 * np.ones(4))
+
+    def test_set_mesh_none_is_noop(self):
+        with compat.set_mesh(None) as active:
+            assert active is None
+
+    def test_cost_analysis_normalized_to_dict(self):
+        compiled = jax.jit(lambda x: x @ x).lower(jnp.ones((8, 8))).compile()
+        cost = compat.cost_analysis(compiled)
+        assert isinstance(cost, dict)
+        assert cost.get("flops", 0) > 0
+        assert compat.cost_flops(compiled) == pytest.approx(cost["flops"])
+        assert compat.cost_bytes_accessed(compiled) >= 0.0
+
+    def test_named_sharding_accepts_spec_or_axes(self):
+        mesh = compat.make_mesh((1,), ("data",))
+        from jax.sharding import PartitionSpec as P
+
+        a = compat.named_sharding(mesh, P("data", None))
+        b = compat.named_sharding(mesh, ("data", None))
+        assert a.spec == b.spec == P("data", None)
+        assert compat.replicated_sharding(mesh).spec == P()
+        assert compat.named_sharding(mesh).spec == P()
+
+    def test_shard_map_runs_on_installed_jax(self):
+        from jax.sharding import PartitionSpec as P
+
+        mesh = compat.make_mesh((1,), ("data",))
+        fn = compat.shard_map(
+            lambda x: x * 2,
+            mesh=mesh,
+            in_specs=(P(),),
+            out_specs=P(),
+            check=False,
+        )
+        np.testing.assert_allclose(fn(jnp.ones((4,))), 2.0 * np.ones(4))
+
+
+class TestCostNormalization:
+    class _Compiled:
+        def __init__(self, raw):
+            self._raw = raw
+
+        def cost_analysis(self):
+            if isinstance(self._raw, Exception):
+                raise self._raw
+            return self._raw
+
+    def test_dict_passthrough(self):
+        assert compat.normalize_cost_analysis({"flops": 3.0}) == {"flops": 3.0}
+
+    def test_single_element_list(self):
+        assert compat.cost_analysis(
+            self._Compiled([{"flops": 5.0, "bytes accessed": 7.0}])
+        ) == {"flops": 5.0, "bytes accessed": 7.0}
+
+    def test_multi_module_list_sums_numeric(self):
+        cost = compat.normalize_cost_analysis(
+            [{"flops": 1.0, "note": "a"}, {"flops": 2.0, "bytes accessed": 4.0}]
+        )
+        assert cost["flops"] == 3.0
+        assert cost["bytes accessed"] == 4.0
+        assert cost["note"] == "a"
+
+    def test_empty_and_none(self):
+        assert compat.normalize_cost_analysis([]) == {}
+        assert compat.normalize_cost_analysis(None) == {}
+        assert compat.normalize_cost_analysis("garbage") == {}
+
+    def test_raising_backend_yields_empty(self):
+        assert compat.cost_analysis(
+            self._Compiled(NotImplementedError("no costs on this backend"))
+        ) == {}
+
+
+class _FakeAxisType:
+    Auto = "AUTO"
+    Explicit = "EXPLICIT"
+    Manual = "MANUAL"
+
+
+class TestProbeMatrix:
+    """Simulate newer/older JAX API surfaces by monkeypatching ``jax``."""
+
+    def test_new_api_axis_types_forwarded(self, monkeypatch):
+        recorded = {}
+
+        def fake_make_mesh(shape, axes, *, devices=None, axis_types=None):
+            recorded.update(shape=shape, axes=axes, axis_types=axis_types)
+            return "NEW-MESH"
+
+        monkeypatch.setattr(jax, "make_mesh", fake_make_mesh)
+        monkeypatch.setattr(
+            jax.sharding, "AxisType", _FakeAxisType, raising=False
+        )
+        compat.reset_cache()
+        assert compat.has("mesh_axis_types")
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
+        assert mesh == "NEW-MESH"
+        assert recorded["axis_types"] == ("AUTO", "AUTO")
+        assert compat.axis_type("explicit") == "EXPLICIT"
+
+    def test_old_api_axis_types_dropped(self, monkeypatch):
+        recorded = {}
+
+        def fake_make_mesh(shape, axes, *, devices=None, **kw):
+            recorded.update(kw)
+            return "OLD-MESH"
+
+        monkeypatch.setattr(jax, "make_mesh", fake_make_mesh)
+        monkeypatch.delattr(jax.sharding, "AxisType", raising=False)
+        compat.reset_cache()
+        assert not compat.has("axis_type_enum")
+        assert not compat.has("mesh_axis_types")
+        assert compat.make_mesh((8,), ("data",)) == "OLD-MESH"
+        assert "axis_types" not in recorded
+        assert compat.axis_type("auto") is None
+
+    def test_no_make_mesh_falls_back_to_mesh_utils(self, monkeypatch):
+        monkeypatch.delattr(jax, "make_mesh", raising=False)
+        compat.reset_cache()
+        assert not compat.has("make_mesh")
+        mesh = compat.make_mesh((1,), ("data",))
+        assert isinstance(mesh, jax.sharding.Mesh)
+        assert mesh.axis_names == ("data",)
+
+    def test_set_mesh_prefers_jax_set_mesh(self, monkeypatch):
+        seen = []
+
+        @contextlib.contextmanager
+        def fake_set_mesh(mesh):
+            seen.append(mesh)
+            yield
+
+        monkeypatch.setattr(jax, "set_mesh", fake_set_mesh, raising=False)
+        compat.reset_cache()
+        assert compat.has("set_mesh")
+        with compat.set_mesh("the-mesh"):
+            pass
+        assert seen == ["the-mesh"]
+
+    def test_set_mesh_use_mesh_fallback(self, monkeypatch):
+        seen = []
+
+        @contextlib.contextmanager
+        def fake_use_mesh(mesh):
+            seen.append(mesh)
+            yield
+
+        monkeypatch.delattr(jax, "set_mesh", raising=False)
+        monkeypatch.setattr(
+            jax.sharding, "use_mesh", fake_use_mesh, raising=False
+        )
+        compat.reset_cache()
+        assert not compat.has("set_mesh")
+        assert compat.has("use_mesh")
+        with compat.set_mesh("the-mesh"):
+            pass
+        assert seen == ["the-mesh"]
+
+    def test_set_mesh_mesh_context_fallback(self, monkeypatch):
+        monkeypatch.delattr(jax, "set_mesh", raising=False)
+        monkeypatch.delattr(jax.sharding, "use_mesh", raising=False)
+        compat.reset_cache()
+
+        class FakeMesh:
+            entered = 0
+
+            def __enter__(self):
+                FakeMesh.entered += 1
+                return self
+
+            def __exit__(self, *exc):
+                return False
+
+        with compat.set_mesh(FakeMesh()):
+            pass
+        assert FakeMesh.entered == 1
+
+    def test_positional_sharding_gated(self, monkeypatch):
+        monkeypatch.delattr(
+            jax.sharding, "PositionalSharding", raising=False
+        )
+        compat.reset_cache()
+        assert not compat.has("positional_sharding")
+        with pytest.raises(NotImplementedError, match="PositionalSharding"):
+            compat.positional_sharding(jax.devices())
+
+    def test_probe_cache_invalidation(self, monkeypatch):
+        before = compat.has("set_mesh")
+        monkeypatch.setattr(
+            jax, "set_mesh", lambda m: contextlib.nullcontext(), raising=False
+        )
+        # cached verdict survives until reset
+        assert compat.has("set_mesh") == before
+        compat.reset_cache()
+        assert compat.has("set_mesh")
+
+    def test_every_probe_has_a_docstring(self):
+        for name, fn in probes_lib._PROBES.items():
+            assert fn.__doc__, f"probe {name!r} undocumented"

@@ -6,7 +6,8 @@ just the paper's examples)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro import core as drjax
 
@@ -76,6 +77,46 @@ def test_gradient_program_stays_in_primitive_set(n, ops, reducer, seed):
     counts = drjax.count_primitives(gx)
     assert any(k.startswith("drjax_") for k in counts)
     # grad plan also executes correctly
+    plan = drjax.build_plan(gx, n)
+    (g,) = drjax.run_plan(plan, jnp.float32(0.3), xs)
+    direct = jax.grad(prog)(jnp.float32(0.3), xs)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(direct),
+                               rtol=1e-5, atol=1e-5)
+
+
+# Deterministic slices of the two properties above — exercised even when
+# hypothesis is absent (the random sweeps then skip).
+
+_SMOKE_CASES = [
+    (1, ["square"], "sum", 11),
+    (4, ["tanhmul", "affine"], "mean", 7),
+    (6, ["affine", "square", "tanhmul"], "weighted", 3),
+]
+
+
+@pytest.mark.parametrize("n,ops,reducer,seed", _SMOKE_CASES)
+def test_plan_executor_matches_direct_smoke(n, ops, reducer, seed):
+    consts = np.random.default_rng(seed).uniform(-1, 1, len(ops))
+    prog = _build_program(n, ops, reducer, consts)
+    xs = jnp.asarray(
+        np.random.default_rng(seed + 1).uniform(-1, 1, n), jnp.float32
+    )
+    args = (jnp.float32(0.7), xs)
+    direct = prog(*args)
+    plan = drjax.build_plan(jax.make_jaxpr(prog)(*args), n)
+    (via_plan,) = drjax.run_plan(plan, *args)
+    np.testing.assert_allclose(np.asarray(via_plan), np.asarray(direct),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,ops,reducer,seed", _SMOKE_CASES[:2])
+def test_gradient_program_stays_in_primitive_set_smoke(n, ops, reducer, seed):
+    consts = np.random.default_rng(seed).uniform(-1, 1, len(ops))
+    prog = _build_program(n, ops, reducer, consts)
+    xs = jnp.zeros((n,), jnp.float32)
+    gx = jax.make_jaxpr(jax.grad(prog))(jnp.float32(0.3), xs)
+    counts = drjax.count_primitives(gx)
+    assert any(k.startswith("drjax_") for k in counts)
     plan = drjax.build_plan(gx, n)
     (g,) = drjax.run_plan(plan, jnp.float32(0.3), xs)
     direct = jax.grad(prog)(jnp.float32(0.3), xs)

@@ -2,42 +2,36 @@
 
 Mini version of the production dry-run (8 fake devices, reduced configs),
 covering every family's train/prefill/decode step builders end to end —
-subprocess-isolated so the device count doesn't leak.
+run inside the shared multi-device worker (see conftest.device_pool) so the
+device count doesn't leak into this process and jax import + compile cache
+are paid once per session.
 """
 
-import json
-import os
-import subprocess
-import sys
 import textwrap
 
 import pytest
 
-_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_PRELUDE = """
+    import json
+    import jax, jax.numpy as jnp
+    from repro import compat
+    from repro.launch import steps as steps_lib, mesh as mesh_lib
+    from repro.models import registry
+    mesh = mesh_lib.make_mesh(
+        (jax.device_count() // 2, 2), ("data", "model"))
+"""
 
 
-def _run(body: str) -> dict:
-    script = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        import json
-        import jax, jax.numpy as jnp
-        from repro.launch import steps as steps_lib, mesh as mesh_lib
-        from repro.models import registry
-        mesh = mesh_lib.make_mesh((4, 2), ("data", "model"))
-    """) + textwrap.dedent(body)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(_REPO, "src")
-    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                         text=True, env=env, timeout=900)
-    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
-    return json.loads(out.stdout.strip().splitlines()[-1])
+def _run(device_pool, body: str) -> dict:
+    return device_pool.run(
+        textwrap.dedent(_PRELUDE) + textwrap.dedent(body)
+    )
 
 
 @pytest.mark.slow
 @pytest.mark.parametrize("arch", ["stablelm_3b", "phi35_moe", "rwkv6_3b"])
-def test_train_step_compiles_on_mesh(arch):
-    res = _run(f"""
+def test_train_step_compiles_on_mesh(device_pool, arch):
+    res = _run(device_pool, f"""
         cfg = registry.get_config("{arch}").reduced(
             d_model=64, num_heads=4, head_dim=16, vocab_size=512,
             dtype="bfloat16", attn_impl="blocked", q_block=8, kv_block=8)
@@ -47,15 +41,16 @@ def test_train_step_compiles_on_mesh(arch):
         compiled = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
                            donate_argnums=(0, 1)).lower(*specs).compile()
         print(json.dumps({{"ok": True,
-                           "flops": compiled.cost_analysis().get("flops", 0)}}))
+                           "flops": compat.cost_analysis(compiled).get(
+                               "flops", 0)}}))
     """)
     assert res["ok"] and res["flops"] > 0
 
 
 @pytest.mark.slow
 @pytest.mark.parametrize("arch", ["stablelm_3b", "recurrentgemma_2b"])
-def test_decode_step_compiles_on_mesh(arch):
-    res = _run(f"""
+def test_decode_step_compiles_on_mesh(device_pool, arch):
+    res = _run(device_pool, f"""
         cfg = registry.get_config("{arch}").reduced(
             d_model=64, num_heads=4, head_dim=16, vocab_size=512,
             dtype="bfloat16")
@@ -71,8 +66,8 @@ def test_decode_step_compiles_on_mesh(arch):
 
 
 @pytest.mark.slow
-def test_drjax_round_step_compiles_on_mesh():
-    res = _run("""
+def test_drjax_round_step_compiles_on_mesh(device_pool):
+    res = _run(device_pool, """
         cfg = registry.get_config("lm_350m").reduced(
             d_model=64, num_heads=4, head_dim=16, vocab_size=512,
             dtype="bfloat16", attn_impl="blocked", q_block=8, kv_block=8)
@@ -92,8 +87,8 @@ def test_drjax_round_step_compiles_on_mesh():
 
 
 @pytest.mark.slow
-def test_int8_prefill_variant_compiles():
-    res = _run("""
+def test_int8_prefill_variant_compiles(device_pool):
+    res = _run(device_pool, """
         cfg = registry.get_config("qwen2_72b").reduced(
             d_model=64, num_heads=8, num_kv_heads=2, head_dim=16,
             d_ff=128, vocab_size=512, dtype="bfloat16",

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro import core as drjax
 
@@ -238,6 +238,51 @@ class TestProperties:
         x = jnp.array(xs, jnp.float32)
 
         @drjax.program(partition_size=n)
+        def f(v):
+            return drjax.reduce_sum(drjax.map_fn(lambda a: a * a + 1.0, v))
+
+        np.testing.assert_allclose(
+            f(x), np.sum(np.float32(xs) ** 2 + 1.0), rtol=1e-4, atol=1e-3
+        )
+
+
+class TestPropertySmoke:
+    """Deterministic slices of the algebraic invariants above — these run
+    even when hypothesis is not installed."""
+
+    @pytest.mark.parametrize("n,x", [(1, 3.5), (5, -41.0), (16, 987.25)])
+    def test_broadcast_then_mean_is_identity(self, n, x):
+        @drjax.program(partition_size=n)
+        def f(v):
+            return drjax.reduce_mean(drjax.broadcast(v))
+
+        np.testing.assert_allclose(f(jnp.float32(x)), x, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("n,x", [(2, 7.0), (16, -31.5)])
+    def test_broadcast_then_sum_scales_by_n(self, n, x):
+        @drjax.program(partition_size=n)
+        def f(v):
+            return drjax.reduce_sum(drjax.broadcast(v))
+
+        np.testing.assert_allclose(f(jnp.float32(x)), n * x, rtol=1e-4, atol=1e-4)
+
+    def test_reduce_sum_linear(self):
+        xs = [1.0, -2.5, 17.0, 0.0, 93.5]
+        x = jnp.array(xs, jnp.float32)
+
+        @drjax.program(partition_size=len(xs))
+        def f(v):
+            return drjax.reduce_sum(v)
+
+        np.testing.assert_allclose(
+            f(2.0 * x), 2.0 * f(x), rtol=1e-4, atol=1e-3
+        )
+
+    def test_map_reduce_equals_numpy(self):
+        xs = [0.5, -12.0, 33.25, 4.0]
+        x = jnp.array(xs, jnp.float32)
+
+        @drjax.program(partition_size=len(xs))
         def f(v):
             return drjax.reduce_sum(drjax.map_fn(lambda a: a * a + 1.0, v))
 

@@ -7,8 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.launch import analytic
-from repro.launch.dryrun import parse_collectives, roofline_terms
+from repro.launch.hlo_cost import parse_collectives, roofline_terms
 from repro.models import registry
 
 
@@ -87,7 +88,7 @@ class TestAnalyticVsHLO:
             )(p)
 
         compiled = jax.jit(step).lower(params).compile()
-        hlo_flops = compiled.cost_analysis()["flops"]
+        hlo_flops = compat.cost_analysis(compiled)["flops"]
         ana = analytic.flops_cell(cfg, "train", b, s, causal_factor=1.0,
                                   remat="none")
         ratio = ana["total"] / hlo_flops
@@ -107,7 +108,7 @@ class TestAnalyticVsHLO:
             return registry.loss_fn(cfg, p, batch)
 
         compiled = jax.jit(fwd).lower(params).compile()
-        hlo_flops = compiled.cost_analysis()["flops"]
+        hlo_flops = compat.cost_analysis(compiled)["flops"]
         ana = analytic.flops_cell(cfg, "prefill", b, s, causal_factor=1.0)
         # prefill analytic excludes the loss/softmax; generous band
         ratio = ana["total"] / hlo_flops

@@ -2,52 +2,38 @@
 
 These must run with multiple XLA host devices, but the device count is locked
 at first JAX init — and the rest of the suite must see ONE device. So each
-test here runs a small script in a subprocess with
-``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+script runs inside the shared multi-device worker (conftest.device_pool).
+Mesh construction and ambient-mesh contexts go through ``repro.compat`` so
+the same scripts work across JAX versions (AxisType / ``jax.set_mesh`` exist
+only on newer releases).
 """
 
-import json
-import os
-import subprocess
-import sys
 import textwrap
 
 import pytest
 
-_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_PRELUDE = """
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro import compat
+    from repro import core as drjax
+
+    mesh = compat.make_mesh((jax.device_count(),), ("data",))
+"""
 
 
-def _run(body: str) -> dict:
-    script = textwrap.dedent(
-        """
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        import json
-        import jax, jax.numpy as jnp
-        import numpy as np
-        from repro import core as drjax
-        """
-    ) + textwrap.dedent(body)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(_REPO, "src")
-    out = subprocess.run(
-        [sys.executable, "-c", script],
-        capture_output=True,
-        text=True,
-        env=env,
-        timeout=600,
+def _run(device_pool, body: str) -> dict:
+    return device_pool.run(
+        textwrap.dedent(_PRELUDE) + textwrap.dedent(body)
     )
-    assert out.returncode == 0, f"stderr:\n{out.stderr}\nstdout:\n{out.stdout}"
-    return json.loads(out.stdout.strip().splitlines()[-1])
 
 
 @pytest.mark.slow
-def test_partitioned_value_is_sharded_over_data_axis():
+def test_partitioned_value_is_sharded_over_data_axis(device_pool):
     res = _run(
+        device_pool,
         """
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
-
         @drjax.program(partition_size=8, partition_axes="data", mesh=mesh)
         def f(x):
             y = drjax.broadcast(x)          # (8, 1024) partitioned
@@ -55,7 +41,7 @@ def test_partitioned_value_is_sharded_over_data_axis():
             return drjax.reduce_sum(z)
 
         x = jnp.ones((1024,), jnp.float32)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(f).lower(x)
             compiled = lowered.compile()
         # output correct under sharding
@@ -63,19 +49,18 @@ def test_partitioned_value_is_sharded_over_data_axis():
         mem = compiled.memory_analysis()
         print(json.dumps({"temp": mem.temp_size_in_bytes,
                           "ok": True}))
-        """
+        """,
     )
     assert res["ok"]
 
 
 @pytest.mark.slow
-def test_ns_ablation_memory_blowup():
+def test_ns_ablation_memory_blowup(device_pool):
     """DrJAX vs DrJAX-NS: without annotations the partitioned intermediate is
     replicated per device; with annotations it is sharded 1/m. (Fig. 6)"""
     res = _run(
+        device_pool,
         """
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
         D = 256
 
         def build(use_ann):
@@ -100,12 +85,12 @@ def test_ns_ablation_memory_blowup():
                                  sharding=NamedSharding(mesh, P(None, None)))
         stats = {}
         for name, ann in [("drjax", True), ("ns", False)]:
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 c = jax.jit(build(ann)).lower(w).compile()
             m = c.memory_analysis()
             stats[name] = m.temp_size_in_bytes
         print(json.dumps(stats))
-        """
+        """,
     )
     # with annotations the big (8, D) partitioned temps live sharded (1/8 per
     # device); the NS program keeps at least one fully-replicated copy.
@@ -113,35 +98,31 @@ def test_ns_ablation_memory_blowup():
 
 
 @pytest.mark.slow
-def test_logical_partition_decoupled_from_device_count():
+def test_logical_partition_decoupled_from_device_count(device_pool):
     """partition_size n shards over m devices for any m | n (paper §3)."""
     res = _run(
+        device_pool,
         """
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
-
         @drjax.program(partition_size=32, partition_axes="data", mesh=mesh)
         def f(x):
-            y = drjax.broadcast(x)      # 32 logical groups over 8 devices
+            y = drjax.broadcast(x)      # 32 logical groups over the devices
             z = drjax.map_fn(lambda a: a ** 2, y)
             return drjax.reduce_sum(z)
 
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             out = jax.jit(f)(jnp.float32(2.0))
         print(json.dumps({"out": float(out)}))
-        """
+        """,
     )
     assert res["out"] == 32 * 4.0
 
 
 @pytest.mark.slow
-def test_spmd_axis_name_annotates_map_intermediates():
+def test_spmd_axis_name_annotates_map_intermediates(device_pool):
     """map_fn must pass spmd_axis_name so intermediates carry the data axis."""
     res = _run(
+        device_pool,
         """
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
-
         @drjax.program(partition_size=8, partition_axes="data", mesh=mesh)
         def f(x):
             y = drjax.broadcast(x)
@@ -149,10 +130,10 @@ def test_spmd_axis_name_annotates_map_intermediates():
             return z
 
         x = jnp.ones((64,), jnp.float32)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(f).lower(x)
         txt = lowered.as_text()
         print(json.dumps({"has_sharding": "sharding" in txt}))
-        """
+        """,
     )
     assert res["has_sharding"]

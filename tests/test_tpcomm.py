@@ -1,10 +1,4 @@
-"""int8 tensor-parallel collective tests (subprocess: needs >1 device)."""
-
-import json
-import os
-import subprocess
-import sys
-import textwrap
+"""int8 tensor-parallel collective tests (multi-device via conftest.device_pool)."""
 
 import jax
 import jax.numpy as jnp
@@ -12,8 +6,6 @@ import numpy as np
 import pytest
 
 from repro.models import tpcomm
-
-_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def test_fallback_matches_matmul_without_mesh():
@@ -32,10 +24,8 @@ def test_wire_byte_model():
 
 
 @pytest.mark.slow
-def test_sharded_exactness_and_s8_on_wire():
-    script = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+def test_sharded_exactness_and_s8_on_wire(device_pool):
+    res = device_pool.run("""
         import json
         import jax, jax.numpy as jnp
         import numpy as np
@@ -43,7 +33,8 @@ def test_sharded_exactness_and_s8_on_wire():
         from repro.models import tpcomm, partitioning
         from repro.launch import mesh as mesh_lib
 
-        mesh = mesh_lib.make_mesh((2, 4), ("data", "model"))
+        mesh = mesh_lib.make_mesh(
+            (2, jax.device_count() // 2), ("data", "model"))
         T, F, D = 16, 32, 24
         k1, k2 = jax.random.split(jax.random.PRNGKey(0))
         x = jax.random.normal(k1, (T, F), jnp.float32)
@@ -63,11 +54,5 @@ def test_sharded_exactness_and_s8_on_wire():
                        if "all-gather" in l and "s8[" in l)
         print(json.dumps({"cosine": cos, "s8_allgathers": n_s8}))
     """)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(_REPO, "src")
-    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                         text=True, env=env, timeout=600)
-    assert out.returncode == 0, out.stderr
-    res = json.loads(out.stdout.strip().splitlines()[-1])
     assert res["cosine"] > 0.9999
     assert res["s8_allgathers"] >= 1  # the reduction rides int8 on the wire
