@@ -58,3 +58,37 @@ print("\nbeam pipeline:\n" + plan.to_beam())
 
 outs = drjax.run_plan(plan, *args)
 print("\nplan executor result:", outs[0], "== direct:", parallel_maml_loss(*args))
+
+# --- §5 continued: control flow is transparent to the interpreter ----------
+
+# A jitted program yields the SAME plan as the unjitted one: the interpreter
+# inlines the pjit sub-jaxpr instead of seeing one opaque eqn.
+jit_plan = drjax.build_plan(jax.make_jaxpr(jax.jit(parallel_maml_loss))(*args), 3)
+print("\njit(f) plan stage kinds:",
+      [s.kind for s in jit_plan.stages],
+      "== unjitted:", [s.kind for s in plan.stages])
+
+# A multi-round training loop (lax.scan whose body communicates) becomes one
+# LOOP stage holding a sub-plan: per-round communication is explicit.
+
+
+@drjax.program(partition_size=3)
+def two_round_sgd(model, tasks):
+    def body(m, _):
+        grads = drjax.map_fn(lambda mm, t: 2.0 * (mm - t),
+                             (drjax.broadcast(m), tasks))
+        g = drjax.reduce_mean(grads)
+        return m - 0.1 * g, g
+
+    m, gs = jax.lax.scan(body, model, None, length=2)
+    return m, gs
+
+
+loop_args = (jnp.float32(0.0), jnp.array([1.0, 2.0, 3.0]))
+loop_plan = drjax.build_plan(jax.make_jaxpr(two_round_sgd)(*loop_args), 3)
+print("\nmulti-round plan (note the LOOP stage):\n" + loop_plan.to_text())
+print("\nmulti-round beam pipeline:\n" + loop_plan.to_beam())
+
+loop_outs = drjax.run_plan(loop_plan, *loop_args)
+print("\nloop plan executor:", loop_outs[0],
+      "== direct:", two_round_sgd(*loop_args)[0])

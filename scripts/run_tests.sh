@@ -16,4 +16,13 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export REPRO_HOST_DEVICES="${REPRO_HOST_DEVICES:-8}"
 
+# Compat convention check (ROADMAP.md): no direct version-sensitive JAX
+# surfaces outside repro/compat. Must be empty or the run fails.
+violations="$(grep -rn --include='*.py' 'AxisType\|cost_analysis()' src/ | grep -v compat || true)"
+if [ -n "$violations" ]; then
+  echo "compat violation: version-sensitive JAX API used outside repro/compat:" >&2
+  echo "$violations" >&2
+  exit 1
+fi
+
 exec python -m pytest -q "$@"

@@ -1,6 +1,11 @@
 """Parallel algorithms expressed with DrJAX MapReduce primitives."""
 
-from .rounds import LocalSGDConfig, make_local_sgd_round, make_fedsgd_round
+from .rounds import (
+    LocalSGDConfig,
+    make_local_sgd_round,
+    make_fedsgd_round,
+    make_multi_round,
+)
 from .async_rounds import make_async_local_sgd_round
 from .maml import make_parallel_maml
 from .btm import branch_train_merge
@@ -9,6 +14,7 @@ __all__ = [
     "LocalSGDConfig",
     "make_local_sgd_round",
     "make_fedsgd_round",
+    "make_multi_round",
     "make_async_local_sgd_round",
     "make_parallel_maml",
     "branch_train_merge",

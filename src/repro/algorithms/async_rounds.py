@@ -76,8 +76,8 @@ def make_async_local_sgd_round(
         return params, new_pending, server_state, metrics
 
     def init_pending(params):
-        return jax.tree_util.tree_map(
-            lambda p: jnp.zeros_like(p, jnp.float32), params
-        )
+        # Match each param's dtype (bf16 params get bf16 pending deltas) so
+        # the first server update isn't fed a dtype-mismatched aggregate.
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
 
     return async_round, init_pending

@@ -112,6 +112,34 @@ def make_local_sgd_round(
     return round_fn
 
 
+def make_multi_round(round_fn: Callable, num_rounds: int) -> Callable:
+    """Stack ``num_rounds`` rounds of ``round_fn`` into one ``lax.scan``.
+
+    ``round_fn`` is any ``(params, server_state, round_data) -> (params,
+    server_state, metrics)`` round (e.g. from :func:`make_local_sgd_round`);
+    ``all_data`` leaves carry a leading ``num_rounds`` axis. Because the scan
+    body broadcasts and reduces every iteration, the §5 interpreter surfaces
+    the trainer as a single ``LoopStage`` whose sub-plan makes the per-round
+    communication explicit (one broadcast + one reduce per round) — the plan
+    a federated/Beam backend would actually schedule.
+    """
+
+    def trainer(params, server_state, all_data):
+        def body(carry, round_data):
+            params, server_state = carry
+            params, server_state, metrics = round_fn(
+                params, server_state, round_data
+            )
+            return (params, server_state), metrics
+
+        (params, server_state), metrics = jax.lax.scan(
+            body, (params, server_state), all_data, length=num_rounds
+        )
+        return params, server_state, metrics
+
+    return trainer
+
+
 def make_fedsgd_round(
     loss_fn: Callable,
     server_opt: Optimizer,

@@ -28,7 +28,12 @@ from .api import (
 )
 from .hierarchical import cross_pod_bytes, hierarchical_reduce_mean
 from .interpreter import (
+    Broadcast,
+    CondStage,
+    LocalCompute,
+    LoopStage,
     MapReducePlan,
+    Reduce,
     build_plan,
     count_primitives,
     run_plan,
@@ -60,6 +65,11 @@ __all__ = [
     "hierarchical_reduce_mean",
     "cross_pod_bytes",
     "MapReducePlan",
+    "Broadcast",
+    "Reduce",
+    "LocalCompute",
+    "LoopStage",
+    "CondStage",
     "build_plan",
     "count_primitives",
     "run_plan",

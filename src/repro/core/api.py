@@ -138,13 +138,21 @@ def reduce_weighted_mean(tree, weights):
     differentiable in both ``tree`` and ``weights`` — this is the reduction
     whose weights Rush et al. (2023) *learn* in tandem with training
     (paper §6, self-tuning algorithms).
+
+    When every weight is zero (e.g. a straggler mask that dropped the whole
+    cohort) the reduction returns zeros rather than 0/0 = NaN, so a fully
+    dropped round leaves the server params untouched instead of poisoning
+    them.
     """
     weights = jnp.asarray(weights)
     denom = prims.bind_reduce_sum(weights)
+    all_dropped = denom == 0
+    safe_denom = jnp.where(all_dropped, jnp.ones_like(denom), denom)
 
     def leaf(x):
         w = weights.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
-        return prims.bind_reduce_sum(x * w) / denom
+        s = prims.bind_reduce_sum(x * w)
+        return jnp.where(all_dropped, jnp.zeros_like(s), s / safe_denom)
 
     return jax.tree_util.tree_map(leaf, tree)
 
@@ -155,7 +163,8 @@ def masked_reduce_mean(tree, mask):
     Over-provisioning + deadline-dropping is the natural straggler mitigation
     under MapReduce semantics: sample ``n`` groups, reduce over whichever
     ``k <= n`` arrive. The mask enters as weights, so the reduction stays
-    differentiable and stays within the DrJAX primitive set.
+    differentiable and stays within the DrJAX primitive set. An all-zero mask
+    (every straggler dropped) yields zeros, not NaN.
     """
     return reduce_weighted_mean(tree, mask)
 

@@ -49,15 +49,17 @@ def hierarchical_reduce_mean(
     per = n // num_supergroups
 
     def stage1(leaf):
-        # (n, ...) -> (P, ...): mean within each superggroup (fast leg)
+        # (n, ...) -> (P, ...): mean within each supergroup (fast leg).
+        # Accumulate in f32 but return in the leaf dtype so the output dtype
+        # matches a flat reduce_mean (no silent f32 upcast escaping).
         shaped = leaf.reshape((num_supergroups, per) + leaf.shape[1:])
-        return jnp.mean(shaped.astype(jnp.float32), axis=1)
+        return jnp.mean(shaped.astype(jnp.float32), axis=1).astype(leaf.dtype)
 
     partials = jax.tree_util.tree_map(stage1, tree)
     if compress_fn is not None:
         partials = compress_fn(partials)
 
-    # stage 2: mean across superggroups under a pod-level placement (slow leg)
+    # stage 2: mean across supergroups under a pod-level placement (slow leg)
     pod_axes = ctx.axes_tuple()
     pod_axis = pod_axes[0] if pod_axes else None
     with placement_lib.placement_context(

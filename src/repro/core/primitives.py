@@ -123,6 +123,8 @@ ad.primitive_transposes[broadcast_p] = _broadcast_transpose
 def _broadcast_batch(args, dims, *, pctx):
     (x,), (d,) = args, dims
     out = broadcast_p.bind(x, pctx=pctx)
+    if d is batching.not_mapped:
+        return out, batching.not_mapped
     # broadcast prepends the partition axis, pushing the batch dim right by 1.
     return out, d + 1
 
@@ -152,6 +154,8 @@ def _make_reduction(name: str, reduce_fn, jvp_linear: bool):
 
     def batch(args, dims, *, pctx):
         (x,), (d,) = args, dims
+        if d is batching.not_mapped:
+            return p.bind(x, pctx=pctx), batching.not_mapped
         # Logical operand: (n, *rest); physical batch dim at d. Move the batch
         # axis to the end so the partition axis stays leading, preserving the
         # primitive (and hence jaxpr interpretability) under vmap.

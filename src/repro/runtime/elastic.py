@@ -60,14 +60,22 @@ def rescale_partition(
 
 def available_mesh_shapes(num_devices: int,
                           model_parallelism: int) -> List[Tuple[int, int]]:
-    """(data, model) mesh shapes for a (possibly degraded) device pool."""
-    shapes = []
-    if num_devices % model_parallelism == 0:
-        shapes.append((num_devices // model_parallelism, model_parallelism))
-    # fall back to smaller model-parallel groups if needed
+    """All viable (data, model) mesh shapes for a (possibly degraded) pool.
+
+    Tries the requested model parallelism first, then every halved fallback
+    down to 1, keeping each shape that tiles the device pool exactly. The
+    first entry is the preferred shape; later entries trade model parallelism
+    for data parallelism (useful when the degraded pool can't tile the
+    original model-parallel group).
+    """
+    shapes: List[Tuple[int, int]] = []
     mp = model_parallelism
-    while mp > 1 and not shapes:
-        mp //= 2
+    while mp >= 1:
         if num_devices % mp == 0:
-            shapes.append((num_devices // mp, mp))
+            shape = (num_devices // mp, mp)
+            if shape not in shapes:
+                shapes.append(shape)
+        if mp == 1:
+            break
+        mp //= 2
     return shapes

@@ -78,6 +78,94 @@ class TestHierarchicalReduce:
         # 512 flat contributions -> 2 compressed partials: 1024x fewer bytes
         assert m["reduction_factor"] == pytest.approx(1024.0)
 
+    def test_output_dtype_matches_flat_reduce_mean(self):
+        """bf16 in -> bf16 out, exactly like flat reduce_mean (no silent
+        f32 upcast escaping the hierarchical reduction)."""
+
+        @drjax.program(partition_size=8)
+        def hier(xs):
+            return hierarchical_reduce_mean(xs, num_supergroups=2)
+
+        @drjax.program(partition_size=8)
+        def flat(xs):
+            return drjax.reduce_mean(xs)
+
+        xs = jnp.arange(8, dtype=jnp.bfloat16)
+        out_h, out_f = hier(xs), flat(xs)
+        assert out_h.dtype == out_f.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(out_h, np.float32), np.asarray(out_f, np.float32),
+            rtol=1e-2,
+        )
+
+
+class TestZeroWeightReductions:
+    """All weights zero (every straggler dropped) must not produce NaN."""
+
+    def test_masked_reduce_mean_all_dropped_returns_zeros(self):
+        @drjax.program(partition_size=4)
+        def f(xs, mask):
+            return drjax.masked_reduce_mean(xs, mask)
+
+        xs = jnp.arange(4, dtype=jnp.float32) + 1.0
+        out = f(xs, jnp.zeros((4,), jnp.float32))
+        assert np.all(np.isfinite(np.asarray(out)))
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+    def test_weighted_mean_all_zero_weights_pytree(self):
+        @drjax.program(partition_size=3)
+        def f(tree, w):
+            return drjax.reduce_weighted_mean(tree, w)
+
+        tree = {"a": jnp.ones((3, 2)), "b": jnp.arange(3, dtype=jnp.float32)}
+        out = f(tree, jnp.zeros((3,)))
+        for leaf in jax.tree_util.tree_leaves(out):
+            np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+
+    def test_nonzero_weights_unchanged(self):
+        @drjax.program(partition_size=4)
+        def f(xs, mask):
+            return drjax.masked_reduce_mean(xs, mask)
+
+        xs = jnp.arange(4, dtype=jnp.float32)
+        mask = jnp.array([1, 0, 1, 0], jnp.float32)
+        np.testing.assert_allclose(f(xs, mask), (0.0 + 2.0) / 2.0)
+
+    def test_gradient_finite_at_zero_mask(self):
+        """MapReduce AD through the guarded reduction stays NaN-free."""
+
+        @drjax.program(partition_size=4)
+        def f(x, mask):
+            xs = drjax.map_fn(lambda a: a * a, drjax.broadcast(x))
+            return drjax.masked_reduce_mean(xs, mask)
+
+        g = jax.grad(f)(jnp.float32(3.0), jnp.zeros((4,), jnp.float32))
+        assert np.isfinite(float(g))
+
+    def test_round_with_all_stragglers_dropped_keeps_params_finite(self):
+        from repro.algorithms.rounds import make_local_sgd_round
+
+        def loss_fn(params, batch):
+            return jnp.mean((params["w"] * batch["x"] - batch["y"]) ** 2)
+
+        cfg = LocalSGDConfig(
+            partition_size=2, num_local_steps=1, straggler_mask=True
+        )
+        server = optim.fedavg_momentum(1.0)
+        round_fn = make_local_sgd_round(
+            loss_fn, optim.sgd(0.05), server, cfg
+        )
+        params = {"w": jnp.float32(1.0)}
+        data = {
+            "x": jnp.ones((2, 1, 4), jnp.float32),
+            "y": jnp.ones((2, 1, 4), jnp.float32),
+        }
+        new_params, _, _ = round_fn(
+            params, server.init(params), data, jnp.zeros((2,), jnp.float32)
+        )
+        # nothing arrived: params unchanged, not NaN-poisoned
+        np.testing.assert_allclose(float(new_params["w"]), 1.0)
+
 
 class TestAsyncLocalSGD:
     def _setup(self):
@@ -135,6 +223,53 @@ class TestAsyncLocalSGD:
         # both trajectories improve and end within a small gap
         assert a_losses[-1] < a_losses[0]
         assert abs(a_losses[-1] - s_losses[-1]) < 0.35
+
+    def test_init_pending_preserves_dtype(self):
+        """bf16 params must get bf16 pending deltas (no forced float32)."""
+
+        def tiny_loss(p, batch):
+            return jnp.mean((p["w"] * batch["x"] - batch["y"]) ** 2)
+
+        rc = LocalSGDConfig(partition_size=2, num_local_steps=1)
+        _, init_pending = make_async_local_sgd_round(
+            tiny_loss, optim.sgd(0.05), optim.fedavg_momentum(1.0), rc
+        )
+        params = {
+            "w": jnp.ones((3,), jnp.bfloat16),
+            "b": jnp.zeros((), jnp.float32),
+        }
+        pending = init_pending(params)
+        assert pending["w"].dtype == jnp.bfloat16
+        assert pending["b"].dtype == jnp.float32
+        for leaf in jax.tree_util.tree_leaves(pending):
+            np.testing.assert_array_equal(np.asarray(leaf, np.float32), 0.0)
+
+    def test_bf16_async_round_trip(self):
+        """A bf16-param async round runs end to end with dtypes preserved."""
+
+        def tiny_loss(p, batch):
+            pred = (p["w"].astype(jnp.float32) * batch["x"]).sum(-1)
+            return jnp.mean((pred - batch["y"]) ** 2)
+
+        rc = LocalSGDConfig(partition_size=2, num_local_steps=1)
+        server = optim.fedavg_momentum(1.0)
+        round_fn, init_pending = make_async_local_sgd_round(
+            tiny_loss, optim.sgd(0.05), server, rc
+        )
+        params = {"w": jnp.ones((4,), jnp.bfloat16)}
+        pending = init_pending(params)
+        sstate = server.init(params)
+        data = {
+            "x": jnp.ones((2, 1, 8, 4), jnp.float32),
+            "y": jnp.zeros((2, 1, 8), jnp.float32),
+        }
+        for _ in range(2):
+            params, pending, sstate, m = round_fn(
+                params, pending, sstate, data
+            )
+        assert params["w"].dtype == jnp.bfloat16
+        assert np.all(np.isfinite(np.asarray(params["w"], np.float32)))
+        assert np.isfinite(float(m["loss"]))
 
     def test_reduce_is_independent_of_next_apply(self):
         """The overlap claim, structurally: in the jaxpr the reduce of this

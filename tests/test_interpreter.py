@@ -106,8 +106,15 @@ class TestEmitters:
         f = make_parallel_maml(3)
         plan = drjax.build_plan(jax.make_jaxpr(f)(*ARGS3), 3)
         beam = plan.to_beam()
-        assert "beam.Create(range(3))" in beam
-        assert "beam.CombineGlobally" in beam
+        assert "range(3)" in beam  # one PCollection element per group
+        assert "beam.CombineGlobally(_reduce_mean)" in beam
+        # local stages call the real sliced callables, and every fn the
+        # pipeline references actually exists
+        fns = plan.stage_fns()
+        assert "fns['stage_2']" in beam
+        assert "stage_2" in fns
+        # broadcasts are named side inputs, not dangling references
+        assert "beam.pvalue.AsSingleton" in beam
 
     def test_count_primitives(self):
         f = make_parallel_maml(3)

@@ -189,6 +189,40 @@ class TestTransforms:
         with pytest.raises(RuntimeError, match="placement context"):
             drjax.broadcast(jnp.float32(1.0))
 
+    def test_batch_rules_handle_not_mapped(self):
+        """Batching rules must pass batching.not_mapped through untouched
+        (an unbatched operand inside a vmap must not get its dim shifted)."""
+        from jax.interpreters import batching
+        from repro.core import placement as placement_lib
+        from repro.core import primitives as prims
+
+        ctx = placement_lib.make_context(3, partition_axes=None)
+        x = jnp.float32(2.0)
+        out, d = prims._broadcast_batch(
+            (x,), (batching.not_mapped,), pctx=ctx
+        )
+        assert d is batching.not_mapped
+        np.testing.assert_array_equal(out, np.full((3,), 2.0, np.float32))
+
+        xs = jnp.arange(3, dtype=jnp.float32)
+        reducer = batching.primitive_batchers[prims.reduce_sum_p]
+        out, d = reducer((xs,), (batching.not_mapped,), pctx=ctx)
+        assert d is batching.not_mapped
+        np.testing.assert_allclose(out, 3.0)
+
+    def test_vmap_unbatched_broadcast_operand(self):
+        """A broadcast whose operand does not carry the vmap axis composes
+        with a batched reduction (mixed in_axes)."""
+
+        @drjax.program(partition_size=3)
+        def f(scale, xs):
+            y = drjax.broadcast(scale)  # unbatched under the outer vmap
+            return drjax.reduce_sum(drjax.map_fn(lambda a, b: a * b, (y, xs)))
+
+        xs = jnp.arange(12, dtype=jnp.float32).reshape(4, 3)
+        out = jax.vmap(f, in_axes=(None, 0))(jnp.float32(2.0), xs)
+        np.testing.assert_allclose(out, 2.0 * xs.sum(-1))
+
 
 class TestProperties:
     """Hypothesis property tests on algebraic invariants of the primitives."""

@@ -99,6 +99,24 @@ class TestElastic:
         assert sched.cohort_size(256) == 512
         assert sched.cohort_size(128) == 256  # one pod lost
 
+    def test_available_mesh_shapes_returns_all_viable(self):
+        from repro.runtime.elastic import available_mesh_shapes
+
+        # 16 devices, mp=8: every halved fallback also tiles the pool
+        shapes = available_mesh_shapes(16, 8)
+        assert shapes == [(2, 8), (4, 4), (8, 2), (16, 1)]
+        # preferred shape first even when fallbacks exist
+        assert available_mesh_shapes(8, 4)[0] == (2, 4)
+
+    def test_available_mesh_shapes_degraded_pool(self):
+        from repro.runtime.elastic import available_mesh_shapes
+
+        # 12 devices can't tile mp=8, but can tile 4, 2, 1
+        shapes = available_mesh_shapes(12, 8)
+        assert shapes == [(3, 4), (6, 2), (12, 1)]
+        # a pool that only fits fully-data-parallel
+        assert available_mesh_shapes(7, 4) == [(7, 1)]
+
     def test_rescale_shrink_and_grow(self):
         data = {"tokens": np.arange(8 * 3).reshape(8, 3)}
         small = rescale_partition(data, 8, 4)
