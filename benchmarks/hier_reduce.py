@@ -1,0 +1,110 @@
+"""Flat vs hierarchical reduce: step time + modeled cross-pod traffic.
+
+Seeds the perf trajectory for the nested-placement work: measures the jitted
+per-call wall time of a flat ``reduce_mean`` over n groups against the
+two-stage ``hierarchical_reduce_mean`` (P pod partials), and pairs each
+measurement with the :func:`repro.core.cross_pod_bytes` napkin model of the
+bytes that would cross the slow DCN leg at production scale. On a single CPU
+host the step times are near-identical (both lower to the same flops) — the
+headline column is the modeled byte reduction, which is what the two-stage
+form buys on a real multi-pod fabric.
+
+Writes ``BENCH_hier.json`` next to the repo root (and prints the usual
+benchmark CSV rows via :func:`run`).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import core as drjax
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(_REPO, "BENCH_hier.json")
+
+
+def _time(fn, *args, iters: int = 30) -> float:
+    out = fn(*args)  # warmup/compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _bench_point(n: int, num_pods: int, d: int) -> dict:
+    @drjax.program(partition_size=n)
+    def flat(xs):
+        return drjax.reduce_mean(xs)
+
+    @drjax.program(partition_size=n)
+    def hier(xs):
+        return drjax.hierarchical_reduce_mean(xs, num_supergroups=num_pods)
+
+    @drjax.program(placements={"pods": num_pods, "clients": n // num_pods})
+    def nested(xs):
+        return drjax.reduce_mean(xs)  # two primitives via the stack
+
+    xs = jax.random.normal(jax.random.PRNGKey(0), (n, d), jnp.float32)
+    xs_nested = xs.reshape(num_pods, n // num_pods, d)
+    flat_us = _time(jax.jit(flat), xs) * 1e6
+    hier_us = _time(jax.jit(hier), xs) * 1e6
+    nested_us = _time(jax.jit(nested), xs_nested) * 1e6
+    # Modeled DCN traffic for a production-sized delta (paper §6 scenario):
+    # param_bytes is per-group contribution crossing the slow leg.
+    param_bytes = xs.dtype.itemsize * d
+    model = drjax.cross_pod_bytes(param_bytes, n=n, num_supergroups=num_pods)
+    return {
+        "n": n,
+        "num_pods": num_pods,
+        "payload_floats": d,
+        "flat_us_per_call": flat_us,
+        "hier_us_per_call": hier_us,
+        "nested_stack_us_per_call": nested_us,
+        "modeled_flat_dcn_bytes": model["flat_bytes"],
+        "modeled_hier_dcn_bytes": model["hierarchical_bytes"],
+        "modeled_dcn_reduction": model["reduction_factor"],
+    }
+
+
+def run():
+    points = [
+        _bench_point(64, 4, 1 << 14),
+        _bench_point(256, 8, 1 << 12),
+    ]
+    with open(OUT_PATH, "w") as f:
+        json.dump({"points": points}, f, indent=2)
+    rows = []
+    for pt in points:
+        key = f"hier_reduce_n{pt['n']}_P{pt['num_pods']}"
+        rows.append({
+            "name": f"{key}_flat",
+            "us_per_call": f"{pt['flat_us_per_call']:.1f}",
+            "derived": f"dcn_bytes={pt['modeled_flat_dcn_bytes']:.0f}",
+        })
+        rows.append({
+            "name": f"{key}_hier",
+            "us_per_call": f"{pt['hier_us_per_call']:.1f}",
+            "derived": (
+                f"dcn_bytes={pt['modeled_hier_dcn_bytes']:.0f}; "
+                f"dcn_reduction={pt['modeled_dcn_reduction']:.0f}x"
+            ),
+        })
+        rows.append({
+            "name": f"{key}_nested_stack",
+            "us_per_call": f"{pt['nested_stack_us_per_call']:.1f}",
+            "derived": "placements=pods/clients",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}")
+    print(f"wrote {OUT_PATH}")

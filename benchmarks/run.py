@@ -16,6 +16,7 @@ import traceback
 BENCHES = (
     ("table1", "benchmarks.table1_flops"),
     ("micro", "benchmarks.primitives_micro"),
+    ("hier", "benchmarks.hier_reduce"),  # also writes BENCH_hier.json
     ("fig4", "benchmarks.fig4_weak_scaling"),
     ("fig5", "benchmarks.fig5_forloop"),
     ("fig6", "benchmarks.fig6_sharding_ablation"),

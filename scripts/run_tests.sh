@@ -25,4 +25,8 @@ if [ -n "$violations" ]; then
   exit 1
 fi
 
+# Examples smoke-run: the quickstart exercises the full authoring surface
+# (flat + nested placements, plan IR, Beam emitter) end to end.
+python examples/quickstart.py > /dev/null
+
 exec python -m pytest -q "$@"

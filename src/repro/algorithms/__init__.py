@@ -3,19 +3,25 @@
 from .rounds import (
     LocalSGDConfig,
     make_local_sgd_round,
+    make_hierarchical_local_sgd_round,
     make_fedsgd_round,
     make_multi_round,
 )
-from .async_rounds import make_async_local_sgd_round
+from .async_rounds import (
+    make_async_local_sgd_round,
+    make_hierarchical_async_round,
+)
 from .maml import make_parallel_maml
 from .btm import branch_train_merge
 
 __all__ = [
     "LocalSGDConfig",
     "make_local_sgd_round",
+    "make_hierarchical_local_sgd_round",
     "make_fedsgd_round",
     "make_multi_round",
     "make_async_local_sgd_round",
+    "make_hierarchical_async_round",
     "make_parallel_maml",
     "branch_train_merge",
 ]

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import core as drjax
-from repro.algorithms.rounds import LocalSGDConfig, _tree_sub
+from repro.algorithms.rounds import LocalSGDConfig, _hier_axes, _tree_sub
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
 
 
@@ -78,6 +78,52 @@ def make_async_local_sgd_round(
     def init_pending(params):
         # Match each param's dtype (bf16 params get bf16 pending deltas) so
         # the first server update isn't fed a dtype-mismatched aggregate.
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    return async_round, init_pending
+
+
+def make_hierarchical_async_round(
+    loss_fn: Callable,
+    client_opt: Optimizer,
+    server_opt: Optimizer,
+    cfg: LocalSGDConfig,
+):
+    """Pod-hierarchical asynchronous round (nested {pods, clients} stack).
+
+    Same one-round-stale overlap as :func:`make_async_local_sgd_round`, but
+    the delta aggregation is the two-stage hierarchical mean: the fast
+    intra-pod leg (``reduce_mean@clients``) can complete while this pod's
+    next map is being scheduled, and only the P pod partials cross the DCN
+    leg. ``round_data`` leaves are (num_pods, clients_per_pod,
+    num_local_steps, ...); ``cfg.partition_size`` counts clients per pod.
+    """
+    if cfg.num_pods < 1:
+        raise ValueError(
+            "make_hierarchical_async_round needs cfg.num_pods >= 1"
+        )
+    from repro.algorithms.rounds import _make_client_update
+
+    client_update = _make_client_update(loss_fn, client_opt, cfg)
+
+    @drjax.program(
+        placements={"pods": cfg.num_pods, "clients": cfg.partition_size},
+        partition_axes=_hier_axes(cfg),
+        mesh=cfg.mesh,
+        use_sharding_annotations=cfg.use_sharding_annotations,
+    )
+    def async_round(params, pending_delta, server_state, round_data):
+        updates, server_state = server_opt.update(
+            pending_delta, server_state, params
+        )
+        params = apply_updates(params, updates)
+        params_b = drjax.broadcast(params)
+        deltas, losses = drjax.map_fn(client_update, (params_b, round_data))
+        new_pending = drjax.hierarchical_reduce_mean(deltas)
+        metrics = {"loss": drjax.hierarchical_reduce_mean(losses)}
+        return params, new_pending, server_state, metrics
+
+    def init_pending(params):
         return jax.tree_util.tree_map(jnp.zeros_like, params)
 
     return async_round, init_pending

@@ -45,6 +45,10 @@ class LocalSGDConfig:
     compression: Optional[str] = None  # None | "int8" | "topk"
     topk_fraction: float = 0.01
     straggler_mask: bool = False
+    # Pod-hierarchical variants: number of slow-link domains. 0 = flat.
+    # When > 0, partition_size counts clients PER POD and the program runs
+    # under the nested {"pods": num_pods, "clients": partition_size} stack.
+    num_pods: int = 0
 
 
 def _tree_sub(a, b):
@@ -53,17 +57,28 @@ def _tree_sub(a, b):
     )
 
 
-def make_local_sgd_round(
-    loss_fn: Callable,
-    client_opt: Optimizer,
-    server_opt: Optimizer,
-    cfg: LocalSGDConfig,
-):
-    """Returns round_fn(global_params, server_state, round_data[, mask]).
+def _hier_axes(cfg: LocalSGDConfig):
+    """Per-placement mesh axes for the nested {pods, clients} stack.
 
-    ``round_data`` leaves have shape (n, num_local_steps, ...per-step batch).
-    Returns (new_params, new_server_state, metrics).
-    """
+    Accepts a mapping (passed through), a (pod, data, ...) tuple (outermost
+    axis to pods, the rest to clients), or a single axis name (to clients —
+    the larger dimension; pods stay logical)."""
+    axes = cfg.partition_axes
+    if axes is None:
+        return None
+    if isinstance(axes, dict):
+        return axes
+    if isinstance(axes, (tuple, list)) and len(axes) >= 2:
+        rest = tuple(axes[1:])
+        return {"pods": axes[0], "clients": rest if len(rest) > 1 else rest[0]}
+    if isinstance(axes, (tuple, list)):
+        axes = axes[0]
+    return {"pods": None, "clients": axes}
+
+
+def _make_client_update(loss_fn: Callable, client_opt: Optimizer,
+                        cfg: LocalSGDConfig):
+    """num_local_steps optimizer steps on one group's batches -> (delta, loss)."""
 
     def client_update(params0, client_data):
         opt_state = client_opt.init(params0)
@@ -87,6 +102,22 @@ def make_local_sgd_round(
             delta = compression.topk_sparsify(delta, cfg.topk_fraction)
         return delta, jnp.mean(losses)
 
+    return client_update
+
+
+def make_local_sgd_round(
+    loss_fn: Callable,
+    client_opt: Optimizer,
+    server_opt: Optimizer,
+    cfg: LocalSGDConfig,
+):
+    """Returns round_fn(global_params, server_state, round_data[, mask]).
+
+    ``round_data`` leaves have shape (n, num_local_steps, ...per-step batch).
+    Returns (new_params, new_server_state, metrics).
+    """
+    client_update = _make_client_update(loss_fn, client_opt, cfg)
+
     @drjax.program(
         partition_size=cfg.partition_size,
         partition_axes=cfg.partition_axes,
@@ -102,6 +133,76 @@ def make_local_sgd_round(
         else:
             mean_delta = drjax.reduce_mean(deltas)
             mean_loss = drjax.reduce_mean(losses)
+        updates, new_server_state = server_opt.update(
+            mean_delta, server_state, global_params
+        )
+        new_params = apply_updates(global_params, updates)
+        metrics = {"loss": mean_loss}
+        return new_params, new_server_state, metrics
+
+    return round_fn
+
+
+def make_hierarchical_local_sgd_round(
+    loss_fn: Callable,
+    client_opt: Optimizer,
+    server_opt: Optimizer,
+    cfg: LocalSGDConfig,
+):
+    """Pod-hierarchical local SGD: the nested-placement round (paper §6).
+
+    Runs under the two-level stack ``{"pods": cfg.num_pods, "clients":
+    cfg.partition_size}`` (``partition_size`` counts clients *per pod*).
+    ``round_data`` leaves have shape (num_pods, clients_per_pod,
+    num_local_steps, ...per-step batch); an optional straggler ``mask`` is
+    (num_pods, clients_per_pod). The delta aggregation is the genuine
+    two-stage reduction — ``reduce_mean@clients`` over ICI, then
+    ``reduce_mean@pods`` over DCN, with ``cfg.compression`` (if set) applied
+    to the per-pod partials that cross the slow leg — so the §5 plan of this
+    round stages the aggregation as two placement-tagged shuffles.
+    """
+    if cfg.num_pods < 1:
+        raise ValueError(
+            "make_hierarchical_local_sgd_round needs cfg.num_pods >= 1"
+        )
+    # Where compression runs depends on the aggregation path. The masked
+    # (straggler) reduction spans both levels in one weighted pass, so it
+    # keeps the flat round's per-client compression; the unmasked path
+    # compresses the pod PARTIALS instead — the value that actually crosses
+    # the DCN leg — so the per-client leg runs uncompressed.
+    client_cfg = (
+        cfg if cfg.straggler_mask
+        else dataclasses.replace(cfg, compression=None)
+    )
+    client_update = _make_client_update(loss_fn, client_opt, client_cfg)
+    pod_compress = None
+    if not cfg.straggler_mask:
+        if cfg.compression == "int8":
+            pod_compress = compression.int8_roundtrip
+        elif cfg.compression == "topk":
+            pod_compress = functools.partial(
+                compression.topk_sparsify, fraction=cfg.topk_fraction
+            )
+
+    @drjax.program(
+        placements={"pods": cfg.num_pods, "clients": cfg.partition_size},
+        partition_axes=_hier_axes(cfg),
+        mesh=cfg.mesh,
+        use_sharding_annotations=cfg.use_sharding_annotations,
+    )
+    def round_fn(global_params, server_state, round_data, mask=None):
+        params_b = drjax.broadcast(global_params)
+        deltas, losses = drjax.map_fn(client_update, (params_b, round_data))
+        if cfg.straggler_mask and mask is not None:
+            mean_delta = drjax.masked_reduce_mean(deltas, mask)
+            mean_loss = drjax.masked_reduce_mean(losses, mask)
+        else:
+            # Two-stage mean with the pod partials (the bytes that cross the
+            # DCN leg) optionally compressed.
+            mean_delta = drjax.hierarchical_reduce_mean(
+                deltas, compress_fn=pod_compress
+            )
+            mean_loss = drjax.hierarchical_reduce_mean(losses)
         updates, new_server_state = server_opt.update(
             mean_delta, server_state, global_params
         )

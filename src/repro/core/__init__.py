@@ -39,7 +39,7 @@ from .interpreter import (
     run_plan,
     trace,
 )
-from .placement import PlacementContext, make_context
+from .placement import Placement, PlacementContext, make_context
 from .primitives import (
     COMMUNICATION_PRIMITIVES,
     DRJAX_PRIMITIVES,
@@ -74,6 +74,7 @@ __all__ = [
     "count_primitives",
     "run_plan",
     "trace",
+    "Placement",
     "PlacementContext",
     "make_context",
     "COMMUNICATION_PRIMITIVES",

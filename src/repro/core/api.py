@@ -12,8 +12,24 @@ Mirrors the paper's authoring surface (Snippets 1–4):
         z = drjax.map_fn(lambda a: 2 * a, y)
         return drjax.reduce_sum(z)
 
+Placements nest (hierarchical MapReduce): declare an ordered stack and
+address individual levels with ``placement=``:
+
+.. code-block:: python
+
+    @drjax.program(placements={"pods": 2, "clients": 4})
+    def hier_round(x):
+        y = drjax.broadcast(x)                       # server -> (2, 4, ...)
+        z = drjax.map_fn(lambda a: 2 * a, y)         # per-client compute
+        partial = drjax.reduce_mean(z, placement="clients")   # (2, ...)
+        return drjax.reduce_mean(partial, placement="pods")   # server
+
+With no ``placement=``, ``broadcast``/``reduce_*`` span the whole stack (one
+primitive per level), so single-placement programs are the unchanged
+degenerate case.
+
 All ops are pytree-polymorphic: partitioned *structures* are pytrees whose
-every leaf carries the leading group axis (paper Fig. 2).
+every leaf carries the leading group axes (paper Fig. 2).
 """
 
 from __future__ import annotations
@@ -58,11 +74,16 @@ def program(
 ):
     """Decorator declaring a DrJAX program.
 
-    Either ``partition_size=n`` (paper API) or ``placements={"clients": n}``
-    (upstream drjax API) must be given. ``partition_axes`` names the mesh
-    axis/axes the partition's leading array dimension shards over (e.g.
-    ``"data"`` or ``("pod", "data")``); ``None`` means purely logical
-    partitioning with no sharding constraints (fine on CPU / single device).
+    Either ``partition_size=n`` (paper API, one "clients" placement) or
+    ``placements={"pods": P, "clients": m}`` (an ordered stack, outermost
+    first — one entry is the upstream drjax API) must be given.
+
+    ``partition_axes`` names the mesh axis/axes each placement's group axis
+    shards over: a bare spec for a single placement (e.g. ``"data"`` or
+    ``("pod", "data")``), or a mapping ``{placement_name: axes}`` for a
+    stack (e.g. ``{"pods": "pod", "clients": "data"}`` — pods over the DCN
+    axis, clients over ICI). ``None`` means purely logical partitioning with
+    no sharding constraints (fine on CPU / single device).
 
     ``use_sharding_annotations=False`` reproduces the paper's DrJAX-NS
     ablation (Fig. 6).
@@ -72,22 +93,14 @@ def program(
             "drjax.program requires a partition size: use "
             "@drjax.program(partition_size=n)."
         )
-    if placements is not None:
-        if partition_size is not None:
-            raise ValueError("Pass either partition_size or placements, not both.")
-        if len(placements) != 1:
-            raise ValueError(
-                f"Exactly one placement is supported; got {list(placements)}."
-            )
-        (placement_name, size), = placements.items()
-    elif partition_size is not None:
-        placement_name, size = "clients", partition_size
-    else:
+    if placements is not None and partition_size is not None:
+        raise ValueError("Pass either partition_size or placements, not both.")
+    if placements is None and partition_size is None:
         raise ValueError("partition_size (or placements) is required.")
 
     ctx = placement_lib.make_context(
-        size,
-        placement=placement_name,
+        partition_size,
+        placements=placements,
         partition_axes=partition_axes,
         mesh=mesh,
         use_sharding_annotations=use_sharding_annotations,
@@ -111,53 +124,134 @@ def program(
 # ---------------------------------------------------------------------------
 
 
-def broadcast(tree):
-    """Replicate a non-partitioned structure to every group (paper §2, BB 1)."""
-    return jax.tree_util.tree_map(prims.bind_broadcast, tree)
+def _ctx() -> placement_lib.PlacementContext:
+    return placement_lib.current_context()
 
 
-def reduce_sum(tree):
-    """Sum a partitioned structure over its groups (paper §2, BB 3)."""
-    return jax.tree_util.tree_map(prims.bind_reduce_sum, tree)
+def broadcast(tree, placement: Optional[str] = None):
+    """Replicate a structure to every group (paper §2, BB 1).
+
+    With ``placement=p`` (stack index i) this is ONE broadcast primitive:
+    depth-i operand → depth-(i+1) result. With no placement it spans the
+    whole stack — server value → fully partitioned, one primitive per level
+    (a single-placement program binds exactly one, as in the paper).
+    """
+    ctx = _ctx()
+    if placement is None:
+        chain = ctx.names  # outermost first: server -> ... -> innermost
+    else:
+        chain = (placement,)
+
+    def leaf(x):
+        for name in chain:
+            x = prims.bind_broadcast(x, placement=name)
+        return x
+
+    return jax.tree_util.tree_map(leaf, tree)
 
 
-def reduce_mean(tree):
-    """Average a partitioned structure over its groups (derived symbol)."""
-    return jax.tree_util.tree_map(prims.bind_reduce_mean, tree)
+def _reduce_tree(tree, binder, placement: Optional[str]):
+    ctx = _ctx()
+    if placement is None:
+        chain = tuple(reversed(ctx.names))  # innermost first: -> server
+    else:
+        chain = (placement,)
+
+    def leaf(x):
+        for name in chain:
+            x = binder(x, placement=name)
+        return x
+
+    return jax.tree_util.tree_map(leaf, tree)
 
 
-def reduce_max(tree):
+def reduce_sum(tree, placement: Optional[str] = None):
+    """Sum a partitioned structure over its groups (paper §2, BB 3).
+
+    ``placement=p`` reduces that one level (depth i+1 → depth i); the
+    default reduces the whole stack down to the server, innermost level
+    first — on a nested stack this is automatically the hierarchical
+    (two-stage) reduction."""
+    return _reduce_tree(tree, prims.bind_reduce_sum, placement)
+
+
+def reduce_mean(tree, placement: Optional[str] = None):
+    """Average a partitioned structure over its groups (derived symbol).
+
+    The stack-spanning default composes per-level means (equal group sizes
+    make the mean-of-means the global mean)."""
+    return _reduce_tree(tree, prims.bind_reduce_mean, placement)
+
+
+def reduce_max(tree, placement: Optional[str] = None):
     """Max over groups (extension primitive; sub-gradient AD)."""
-    return jax.tree_util.tree_map(prims.bind_reduce_max, tree)
+    return _reduce_tree(tree, prims.bind_reduce_max, placement)
 
 
-def reduce_weighted_mean(tree, weights):
+def reduce_weighted_mean(tree, weights, placement: Optional[str] = None):
     """Weighted mean over groups: sum_i w_i x_i / sum_i w_i.
 
-    ``weights`` is a partitioned vector of shape ``(n,)``. Fully
-    differentiable in both ``tree`` and ``weights`` — this is the reduction
-    whose weights Rush et al. (2023) *learn* in tandem with training
-    (paper §6, self-tuning algorithms).
+    ``weights`` is a partitioned array with one entry per group: shape
+    ``(n,)`` for the flat API, or the stack-prefix shape (e.g. ``(P, m)``)
+    when reducing a nested stack / an inner placement. Fully differentiable
+    in both ``tree`` and ``weights`` — this is the reduction whose weights
+    Rush et al. (2023) *learn* in tandem with training (paper §6,
+    self-tuning algorithms).
 
     When every weight is zero (e.g. a straggler mask that dropped the whole
     cohort) the reduction returns zeros rather than 0/0 = NaN, so a fully
     dropped round leaves the server params untouched instead of poisoning
     them.
     """
+    ctx = _ctx()
     weights = jnp.asarray(weights)
-    denom = prims.bind_reduce_sum(weights)
+    if placement is None:
+        chain = tuple(reversed(ctx.names))
+        depth_in, depth_out = ctx.depth, 0
+    else:
+        i = ctx.index_of(placement)
+        chain = (placement,)
+        depth_in, depth_out = i + 1, i
+    expected = ctx.sizes[:depth_in]
+    if weights.shape != expected:
+        raise ValueError(
+            f"reduce_weighted_mean: weights have shape {weights.shape}, but "
+            f"the reduction over placement(s) {list(ctx.names[:depth_in])} "
+            f"needs one weight per group: expected shape {expected}."
+        )
+
+    def rsum(x):
+        for name in chain:
+            x = prims.bind_reduce_sum(x, placement=name)
+        return x
+
+    denom = rsum(weights)
     all_dropped = denom == 0
     safe_denom = jnp.where(all_dropped, jnp.ones_like(denom), denom)
 
     def leaf(x):
-        w = weights.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
-        s = prims.bind_reduce_sum(x * w)
-        return jnp.where(all_dropped, jnp.zeros_like(s), s / safe_denom)
+        if x.ndim < depth_in or x.shape[:depth_in] != expected:
+            raise ValueError(
+                f"reduce_weighted_mean: weights of shape {weights.shape} do "
+                f"not match a leaf of shape {x.shape}: the leaf's leading "
+                f"{'axis' if depth_in == 1 else f'{depth_in} axes'} must be "
+                f"the group axes {expected} (one entry per group of "
+                f"placement(s) {list(ctx.names[:depth_in])})."
+            )
+        w = weights.reshape(expected + (1,) * (x.ndim - depth_in))
+        s = rsum(x * w)
+        dropped = all_dropped.reshape(
+            all_dropped.shape + (1,) * (s.ndim - depth_out)
+        )
+        denom_b = safe_denom.reshape(
+            safe_denom.shape + (1,) * (s.ndim - depth_out)
+        )
+        return jnp.where(dropped, jnp.zeros_like(s), s / denom_b)
 
     return jax.tree_util.tree_map(leaf, tree)
 
 
-def masked_reduce_mean(tree, mask):
+def masked_reduce_mean(tree, mask, placement: Optional[str] = None):
     """Mean over the groups with ``mask == 1`` (straggler-dropping reduce).
 
     Over-provisioning + deadline-dropping is the natural straggler mitigation
@@ -166,33 +260,53 @@ def masked_reduce_mean(tree, mask):
     differentiable and stays within the DrJAX primitive set. An all-zero mask
     (every straggler dropped) yields zeros, not NaN.
     """
-    return reduce_weighted_mean(tree, mask)
+    return reduce_weighted_mean(tree, mask, placement)
 
 
-def map_fn(fn: Callable, tree):
+def map_fn(fn: Callable, tree, placement: Optional[str] = None):
     """Apply ``fn`` pointwise across the groups of a partition (paper §2, BB 2).
 
     ``tree`` is a partitioned structure; if it is a *tuple*, its elements are
     passed to ``fn`` as separate positional arguments (paper Snippet 4).
 
-    Implemented as ``jax.vmap`` over the leading axis with
-    ``spmd_axis_name=<partition mesh axes>`` — vmap's SPMD axis name is what
+    Implemented as ``jax.vmap`` over the addressed placement's axis with
+    that placement's ``spmd_axis_name`` — vmap's SPMD axis name is what
     installs the paper's *dynamic* sharding annotations on every intermediate
     of the mapped computation, which Fig. 6 shows to be load-bearing for weak
-    scaling. The mapped computation itself is inlined into the jaxpr, exactly
-    as in paper Snippet 5.
+    scaling. With no ``placement``, the vmaps nest over every level of the
+    stack (outermost level outermost), so on a nested stack ``fn`` still sees
+    one group's slice. The mapped computation itself is inlined into the
+    jaxpr, exactly as in paper Snippet 5.
     """
     ctx = placement_lib.current_context()
     if isinstance(tree, tuple):
         f = lambda args: fn(*args)
     else:
         f = fn
-    spmd = ctx.spmd_axis_name()
-    mapped = jax.vmap(f, in_axes=0, out_axes=0, spmd_axis_name=spmd)
-    out = mapped(tree)
-    return sharding_lib.constrain_tree(out, ctx, partitioned=True)
+    if placement is None:
+        # Wrap innermost level first so the outermost placement's vmap is the
+        # outermost transform; each level annotates with its own mesh axes.
+        depth = ctx.depth
+        for name in reversed(ctx.names):
+            f = jax.vmap(
+                f, in_axes=0, out_axes=0,
+                spmd_axis_name=ctx.spmd_axis_name_for(name),
+            )
+    else:
+        i = ctx.index_of(placement)
+        depth = i + 1
+        f = jax.vmap(
+            f, in_axes=i, out_axes=i,
+            spmd_axis_name=ctx.spmd_axis_name_for(placement),
+        )
+    out = f(tree)
+    return sharding_lib.constrain_tree(out, ctx, partitioned=True, depth=depth)
 
 
-def partition_size() -> int:
-    """The number of groups in the ambient placement."""
-    return placement_lib.current_context().partition_size
+def partition_size(placement: Optional[str] = None) -> int:
+    """Number of groups: one placement's size, or (default) the total number
+    of innermost groups across the whole ambient stack."""
+    ctx = placement_lib.current_context()
+    if placement is None:
+        return ctx.total_size()
+    return ctx.get(placement).size

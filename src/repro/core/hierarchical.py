@@ -9,69 +9,141 @@ the slow leg. The hierarchical form:
     stage 2 (cross pod):   P partials → 1, optionally compressed (slow DCN)
 
 cuts cross-pod bytes by n/P before compression (×4 more with int8). Both
-stages are expressed with the SAME DrJAX building blocks — the partitioned
-value is reshaped (n, ...) → (P, n/P, ...), stage 1 is an intra-group mean
-over axis 1 under the pod placement, stage 2 a ``reduce_mean`` over pods —
-so MapReduce AD and the §5 interpreter still apply (the derivative of a
-hierarchical reduction is a hierarchical broadcast, automatically).
+stages are REAL DrJAX reduce primitives addressed at different levels of a
+placement stack — ``reduce_mean(placement="clients")`` then
+``reduce_mean(placement="pods")`` — so each stage carries its own placement's
+sharding annotations (pods pin the DCN axis, clients the ICI axis), MapReduce
+AD applies per stage (the derivative of a hierarchical reduction is a
+hierarchical broadcast, automatically), and the §5 interpreter stages the
+reduction as two placement-tagged REDUCE shuffles.
+
+Under a genuinely nested ``@drjax.program(placements={"pods": P,
+"clients": m})`` the two stages bind directly. Under the flat single-
+placement API, the (n, ...) value is regrouped to (P, n/P, ...) and the same
+two primitives bind inside a derived two-level stack — the one remaining
+reshape is pure local compute at the pod boundary.
 """
 
 from __future__ import annotations
 
+import math
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 from . import api
 from . import placement as placement_lib
 
+_SUPER = "pods"
+
+
+def _axes_if_divisible(axes, groups: int, mesh):
+    """Keep a derived placement's mesh axes only if its group count can
+    shard over them (devices | groups); otherwise leave the level logical.
+
+    With no mesh in the context, constraints are never emitted, so the axes
+    are kept as documentation. Axes missing from the mesh are also kept —
+    the later sharding constraint fails loudly, which beats hiding a typo.
+    """
+    if axes is None or mesh is None:
+        return axes
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    if not axes_t:
+        return None
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    devices = 1
+    for a in axes_t:
+        if a not in mesh_sizes:
+            return axes
+        devices *= mesh_sizes[a]
+    return axes if groups % devices == 0 else None
+
 
 def hierarchical_reduce_mean(
     tree,
-    num_supergroups: int,
+    num_supergroups: Optional[int] = None,
     compress_fn: Optional[Callable] = None,
 ):
     """Two-stage mean over a partitioned structure.
 
-    ``num_supergroups`` is the number of slow-link domains (pods); must
-    divide the partition size. ``compress_fn`` (e.g.
-    ``repro.compression.int8_roundtrip``) is applied to the per-pod partial
-    means — the value that crosses the slow leg.
+    ``num_supergroups`` is the number of slow-link domains (pods). Under the
+    flat API it is required and must divide the partition size; under a
+    nested placement stack it is inferred from the stack (and validated if
+    passed). ``compress_fn`` (e.g. ``repro.compression.int8_roundtrip``) is
+    applied to the per-pod partial means — the value that crosses the slow
+    leg.
     """
     ctx = placement_lib.current_context()
+
+    if ctx.depth >= 2:
+        # Genuinely nested placements: the stack already separates the fast
+        # and slow legs — bind the per-level primitives directly.
+        outer_total = math.prod(ctx.sizes[:-1])
+        if num_supergroups is not None and num_supergroups != outer_total:
+            raise ValueError(
+                f"num_supergroups={num_supergroups} contradicts the ambient "
+                f"placement stack {dict(zip(ctx.names, ctx.sizes))}, which "
+                f"has {outer_total} slow-link domain(s)"
+            )
+        partials = api.reduce_mean(tree, placement=ctx.names[-1])
+        if compress_fn is not None:
+            partials = compress_fn(partials)
+        out = partials
+        for name in reversed(ctx.names[:-1]):
+            out = api.reduce_mean(out, placement=name)
+        return out
+
+    # Flat single-placement API: regroup (n, ...) -> (P, n/P, ...) and run the
+    # same two primitives inside a derived {pods, <placement>} stack.
     n = ctx.partition_size
+    if num_supergroups is None:
+        raise ValueError(
+            "num_supergroups is required under a single-placement context"
+        )
     if n % num_supergroups != 0:
         raise ValueError(
             f"num_supergroups={num_supergroups} must divide partition "
             f"size {n}"
         )
     per = n // num_supergroups
+    inner_name = ctx.placement
+    super_name = _SUPER if inner_name != _SUPER else "superpods"
+    axes = ctx.axes_tuple()
+    # The outermost mesh axis carries the slow (cross-pod) leg; whatever
+    # remains stays with the per-pod groups. Each derived level only pins
+    # its axis when its group count is divisible by that axis's device
+    # count (the paper's m | n rule) — P pod partials over an 8-way data
+    # axis would otherwise fail sharding at trace time.
+    super_axes = _axes_if_divisible(
+        axes[0] if axes else None, num_supergroups, ctx.mesh
+    )
+    inner_axes = _axes_if_divisible(
+        axes[1:] if len(axes) > 1 else None, per, ctx.mesh
+    )
+    nested = placement_lib.PlacementContext(
+        placements=(
+            placement_lib.Placement(super_name, num_supergroups, super_axes),
+            placement_lib.Placement(inner_name, per, inner_axes),
+        ),
+        mesh=ctx.mesh,
+        use_sharding_annotations=ctx.use_sharding_annotations,
+        use_spmd_axis_name=ctx.use_spmd_axis_name,
+    )
 
-    def stage1(leaf):
-        # (n, ...) -> (P, ...): mean within each supergroup (fast leg).
-        # Accumulate in f32 but return in the leaf dtype so the output dtype
-        # matches a flat reduce_mean (no silent f32 upcast escaping).
-        shaped = leaf.reshape((num_supergroups, per) + leaf.shape[1:])
-        return jnp.mean(shaped.astype(jnp.float32), axis=1).astype(leaf.dtype)
-
-    partials = jax.tree_util.tree_map(stage1, tree)
-    if compress_fn is not None:
-        partials = compress_fn(partials)
-
-    # stage 2: mean across supergroups under a pod-level placement (slow leg)
-    pod_axes = ctx.axes_tuple()
-    pod_axis = pod_axes[0] if pod_axes else None
-    with placement_lib.placement_context(
-        placement_lib.make_context(
-            num_supergroups,
-            placement=f"{ctx.placement}_pods",
-            partition_axes=pod_axis,
-            mesh=ctx.mesh,
-            use_sharding_annotations=ctx.use_sharding_annotations,
-        )
-    ):
-        return api.reduce_mean(partials)
+    regrouped = jax.tree_util.tree_map(
+        lambda leaf: leaf.reshape(
+            (num_supergroups, per) + leaf.shape[1:]
+        ),
+        tree,
+    )
+    with placement_lib.placement_context(nested):
+        # stage 1: mean within each supergroup (fast leg) — a real reduce
+        # primitive, so the partials carry the pod placement's sharding.
+        partials = api.reduce_mean(regrouped, placement=inner_name)
+        if compress_fn is not None:
+            partials = compress_fn(partials)
+        # stage 2: mean across supergroups (slow leg).
+        return api.reduce_mean(partials, placement=super_name)
 
 
 def cross_pod_bytes(param_bytes: float, n: int, num_supergroups: int,

@@ -24,9 +24,16 @@ programs in ``jit`` (one opaque ``pjit`` eqn), training loops live in
 * control flow with *no* communication inside stays an opaque local eqn (it is
   purely local compute, exactly what a Map worker would run).
 
-Partitioned-ness is propagated through the binders of every sub-jaxpr; loop
-carries are solved to a fixed point (a carry that *becomes* partitioned after
-one iteration is partitioned for the whole loop).
+Placement is tracked on a **placement lattice**: every value carries the
+stack prefix of named placements whose group axes lead it (``()`` = server,
+``("pods",)`` = pod-partitioned, ``("pods", "clients")`` = fully
+partitioned). DrJAX eqns *move* values on the lattice — the addressed
+placement travels in the primitive params, so ``REDUCE@clients`` and
+``REDUCE@pods`` are distinct, placement-tagged stages and a hierarchical
+reduction visibly stages as two shuffles. Local eqns join their inputs'
+placements (longest prefix wins); loop carries are solved to a fixed point
+over the lattice (a carry that *climbs* the lattice after one iteration
+keeps the joined placement for the whole loop).
 
 This module provides:
 
@@ -45,7 +52,8 @@ This module provides:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+import math
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +67,40 @@ _COMM = {
     "drjax_reduce_mean": "reduce_mean",
     "drjax_reduce_max": "reduce_max",
 }
+
+# A placement-set on the lattice: the stack prefix of placement names whose
+# group axes lead a value. () is the server.
+PlacementSet = Tuple[str, ...]
+
+
+def _join(a: PlacementSet, b: PlacementSet) -> PlacementSet:
+    """Lattice join: the deeper of two stack prefixes.
+
+    Well-formed programs only ever join comparable prefixes; if two
+    incomparable chains meet (e.g. across a flat/nested regrouping
+    boundary), the deeper one wins — what matters downstream is how many
+    group axes lead the value."""
+    return a if len(a) >= len(b) else b
+
+
+def _normalize_placements(spec) -> Tuple[Tuple[str, int], ...]:
+    """Accept an int (one "clients" placement), an ordered mapping
+    name -> size, a PlacementContext, or a (name, size) sequence."""
+    if isinstance(spec, (int, np.integer)):
+        return (("clients", int(spec)),)
+    if hasattr(spec, "placements"):  # PlacementContext
+        return tuple((p.name, p.size) for p in spec.placements)
+    if isinstance(spec, Mapping):
+        return tuple((str(n), int(s)) for n, s in spec.items())
+    return tuple((str(n), int(s)) for n, s in spec)
+
+
+def _eqn_placement(eqn) -> Tuple[Tuple[str, ...], int]:
+    """(stack names, addressed index) of a DrJAX eqn, from its params."""
+    pctx = eqn.params.get("pctx")
+    if pctx is None:  # defensive: a hand-built eqn without context
+        return ("clients",), 0
+    return pctx.names, pctx.index_of(eqn.params.get("placement"))
 
 # Param keys under which call-like primitives stash their sub-jaxpr.
 _CALL_JAXPR_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr")
@@ -163,15 +205,31 @@ class LocalCompute(Stage):
 
 @dataclasses.dataclass
 class Broadcast(Stage):
+    """``broadcast@placement``: one level down the placement stack.
+
+    ``placement`` is the addressed placement (the level whose group axis the
+    broadcast inserts); ``source`` is the placement the operand lives at —
+    ``"server"`` for the outermost level, else the next-outer placement."""
+
     eqn: Any = None
     kind: str = "BROADCAST"
+    placement: str = "clients"
+    source: str = "server"
 
 
 @dataclasses.dataclass
 class Reduce(Stage):
+    """``reduce_*@placement``: one level up the placement stack.
+
+    ``placement`` is the addressed placement (whose group axis the reduce
+    removes); ``dest`` is where the result lands — ``"server"`` for the
+    outermost level, else the next-outer placement."""
+
     op: str = "reduce_sum"
     eqn: Any = None
     kind: str = "REDUCE"
+    placement: str = "clients"
+    dest: str = "server"
 
 
 @dataclasses.dataclass
@@ -205,10 +263,18 @@ class CondStage(Stage):
 @dataclasses.dataclass
 class MapReducePlan:
     jaxpr: Any  # ClosedJaxpr
-    partition_size: int
+    partition_size: int  # total innermost groups (product over the stack)
     stages: List[Stage]
-    partitioned_invars: Tuple[bool, ...]
-    partitioned_outvars: Tuple[bool, ...] = ()
+    # Lattice depth of each invar/outvar: the number of leading group axes
+    # (0 = server). Bools compare equal to 0/1, so single-placement callers
+    # keep seeing the legacy True/False surface.
+    partitioned_invars: Tuple[int, ...]
+    partitioned_outvars: Tuple[int, ...] = ()
+    # The plan's placement stack, outermost first.
+    placements: Tuple[Tuple[str, int], ...] = ()
+    # Full placement-sets (name prefixes) per invar/outvar.
+    invar_placements: Tuple[PlacementSet, ...] = ()
+    outvar_placements: Tuple[PlacementSet, ...] = ()
     # Values for constvars pulled in from inlined sub-jaxprs.
     extra_consts: Dict[Any, Any] = dataclasses.field(default_factory=dict)
     # jaxpr.outvars resolved through the inlining substitution: reading these
@@ -218,8 +284,24 @@ class MapReducePlan:
     def __post_init__(self):
         if not self.out_atoms:
             self.out_atoms = tuple(self.jaxpr.jaxpr.outvars)
+        if not self.placements:
+            self.placements = (("clients", self.partition_size),)
+        if not self.invar_placements:
+            names = tuple(n for n, _ in self.placements)
+            self.invar_placements = tuple(
+                names[: int(d)] for d in self.partitioned_invars
+            )
         if not self.partitioned_outvars:
-            self.partitioned_outvars = tuple(False for _ in self.out_atoms)
+            self.partitioned_outvars = tuple(0 for _ in self.out_atoms)
+        if not self.outvar_placements:
+            names = tuple(n for n, _ in self.placements)
+            self.outvar_placements = tuple(
+                names[: int(d)] for d in self.partitioned_outvars
+            )
+
+    @property
+    def placement_sizes(self) -> Tuple[int, ...]:
+        return tuple(s for _, s in self.placements)
 
     # -- const environment --------------------------------------------------
 
@@ -317,12 +399,30 @@ class MapReducePlan:
 
     def to_text(self) -> str:
         pp = _VarNamer()
+        if len(self.placements) > 1:
+            header = (
+                "MapReducePlan(placements="
+                + "/".join(f"{n}:{s}" for n, s in self.placements)
+                + ")"
+            )
+        else:
+            header = f"MapReducePlan(partition_size={self.partition_size})"
+
+        def place_tag(pl: PlacementSet) -> str:
+            if not pl:
+                return "SERVER"
+            if len(self.placements) == 1 and len(pl) == 1:
+                return "GROUPS"
+            return "/".join(pl)
+
         lines = [
-            f"MapReducePlan(partition_size={self.partition_size})",
+            header,
             "  inputs: "
             + ", ".join(
-                f"{pp(v)}:{v.aval.str_short()} @{'GROUPS' if p else 'SERVER'}"
-                for v, p in zip(self.jaxpr.jaxpr.invars, self.partitioned_invars)
+                f"{pp(v)}:{v.aval.str_short()} @{place_tag(pl)}"
+                for v, pl in zip(
+                    self.jaxpr.jaxpr.invars, self.invar_placements
+                )
             ),
         ]
         lines.extend(_stage_text_lines(self.stages, indent=2, pp=pp))
@@ -460,13 +560,23 @@ def _stage_text_lines(
             ops = ", ".join(e.primitive.name for e in s.eqns)
             lines.append(f"{pad}stage {i}: {s.kind} [{ops}]")
         elif isinstance(s, Broadcast):
+            route = (
+                "server->groups"
+                if s.source == "server"
+                else f"{s.source}->{s.placement}"
+            )
             lines.append(
-                f"{pad}stage {i}: BROADCAST server->groups "
+                f"{pad}stage {i}: BROADCAST {route} @{s.placement} "
                 f"({pp(s.eqn.invars[0])} -> {pp(s.eqn.outvars[0])})"
             )
         elif isinstance(s, Reduce):
+            route = (
+                "groups->server"
+                if s.dest == "server"
+                else f"{s.placement}->{s.dest}"
+            )
             lines.append(
-                f"{pad}stage {i}: {s.op.upper()} groups->server "
+                f"{pad}stage {i}: {s.op.upper()} {route} @{s.placement} "
                 f"({pp(s.eqn.invars[0])} -> {pp(s.eqn.outvars[0])})"
             )
         elif isinstance(s, LoopStage):
@@ -503,46 +613,76 @@ def trace(fn: Callable, *example_args) -> Any:
     return jax.make_jaxpr(fn)(*example_args)
 
 
+def _placement_depth(shape, sizes: Tuple[int, ...]) -> int:
+    """Largest k such that the k leading dims match the k outermost
+    placement sizes (the lattice-depth heuristic for undeclared inputs)."""
+    k = 0
+    while k < len(sizes) and k < len(shape) and shape[k] == sizes[k]:
+        k += 1
+    return k
+
+
 def build_plan(
     closed: Any,
-    partition_size: int,
-    partitioned_invars: Optional[Sequence[bool]] = None,
+    partition_size,
+    partitioned_invars: Optional[Sequence[Any]] = None,
 ) -> MapReducePlan:
     """Segment a jaxpr into MapReduce stages (recursing into control flow).
 
-    ``partitioned_invars[i]`` declares whether input i is a partitioned value
-    (leading group axis). If omitted, an input is assumed partitioned iff its
-    leading dimension equals ``partition_size`` — right for all examples here,
-    but callers with ambiguous shapes should pass it explicitly.
+    ``partition_size`` is the placement spec: an int (the paper's flat API —
+    one "clients" placement), an ordered mapping ``{"pods": P, "clients": m}``
+    (outermost first), a ``PlacementContext``, or a (name, size) sequence.
+
+    ``partitioned_invars[i]`` declares input i's position on the placement
+    lattice: a bool (legacy: False = server, True = fully partitioned), an
+    int depth (number of leading group axes), or a placement-name prefix
+    tuple. If omitted, an input's depth is the longest prefix of placement
+    sizes matching its leading dims — right for all examples here, but
+    callers with ambiguous shapes should pass it explicitly.
     """
+    placements = _normalize_placements(partition_size)
+    names = tuple(n for n, _ in placements)
+    sizes = tuple(s for _, s in placements)
+    total = math.prod(sizes)
+
+    def norm_part(entry) -> PlacementSet:
+        if isinstance(entry, tuple):
+            return entry
+        if entry is True:
+            return names
+        if entry is False or entry is None:
+            return ()
+        return names[: int(entry)]
+
     jaxpr = closed.jaxpr
     if partitioned_invars is None:
-        partitioned_invars = tuple(
-            bool(v.aval.shape) and v.aval.shape[0] == partition_size
+        invar_placements = tuple(
+            names[: _placement_depth(v.aval.shape, sizes)]
             for v in jaxpr.invars
         )
-    partitioned_invars = tuple(partitioned_invars)
+    else:
+        invar_placements = tuple(norm_part(e) for e in partitioned_invars)
 
-    placed: Dict[Any, bool] = {}  # defining var -> is_partitioned
+    placed: Dict[Any, PlacementSet] = {}  # defining var -> placement prefix
     subst: Dict[Any, Any] = {}  # call-boundary var -> defining atom
     extra_consts: Dict[Any, Any] = {}
     stages: List[Stage] = []
 
-    for v, p in zip(jaxpr.invars, partitioned_invars):
+    for v, p in zip(jaxpr.invars, invar_placements):
         placed[v] = p
     for v in jaxpr.constvars:
-        placed[v] = False
+        placed[v] = ()
 
     def resolve(a):
         while not _is_literal(a) and a in subst:
             a = subst[a]
         return a
 
-    def is_part(a) -> bool:
+    def is_part(a) -> PlacementSet:
         a = resolve(a)
         if _is_literal(a):
-            return False
-        return placed.get(a, False)
+            return ()
+        return placed.get(a, ())
 
     def append_local(eqn, at_groups: bool):
         if (
@@ -558,7 +698,7 @@ def build_plan(
         inner = sub.jaxpr
         for cv, cval in zip(inner.constvars, sub.consts):
             extra_consts[cv] = cval
-            placed[cv] = False
+            placed[cv] = ()
         for iv, outer in zip(inner.invars, eqn.invars):
             subst[iv] = resolve(outer)
         # Alpha-rename every var the body defines: jit caches one jaxpr per
@@ -589,21 +729,22 @@ def build_plan(
         consts_p = [is_part(a) for a in eqn.invars[:nc]]
         carry_p = [is_part(a) for a in eqn.invars[nc : nc + ncar]]
         # xs binders see one slice per step: the scan axis is gone, so the
-        # shape heuristic applies to the *sliced* aval.
+        # lattice-depth heuristic applies to the *sliced* aval.
         xs_p = [
-            bool(b.aval.shape) and b.aval.shape[0] == partition_size
+            names[: _placement_depth(b.aval.shape, sizes)]
             for b in body.jaxpr.invars[nc + ncar :]
         ]
-        # Fixed point over the carry: a carry that becomes partitioned after
-        # one iteration is partitioned for the whole loop.
+        # Fixed point over the carry on the placement lattice: a carry that
+        # climbs the lattice after one iteration keeps the joined placement
+        # for the whole loop.
         body_plan = None
         for _ in range(ncar + 1):
             body_plan = build_plan(
-                body, partition_size,
+                body, placements,
                 partitioned_invars=consts_p + carry_p + xs_p,
             )
-            out_p = list(body_plan.partitioned_outvars[:ncar])
-            new_carry = [a or b for a, b in zip(carry_p, out_p)]
+            out_p = list(body_plan.outvar_placements[:ncar])
+            new_carry = [_join(a, b) for a, b in zip(carry_p, out_p)]
             if new_carry == carry_p:
                 break
             carry_p = new_carry
@@ -615,14 +756,14 @@ def build_plan(
                 loop_kind="scan",
             )
         )
-        outs_p = body_plan.partitioned_outvars
+        outs_p = body_plan.outvar_placements
         # carry outputs keep the fixed-point placement; stacked ys are
-        # server-placed: the new time axis leads, so the group axis (if any)
-        # is no longer the leading axis and downstream consumption of the
+        # server-placed: the new time axis leads, so the group axes (if any)
+        # are no longer the leading axes and downstream consumption of the
         # whole (T, ...) stack happens at the server/driver.
         num_ys = len(eqn.outvars) - ncar
         for o, p in zip(
-            eqn.outvars, list(outs_p[:ncar]) + [False] * num_ys
+            eqn.outvars, list(outs_p[:ncar]) + [()] * num_ys
         ):
             if not _is_dropvar(o):
                 placed[o] = p
@@ -637,18 +778,18 @@ def build_plan(
         body_plan = None
         for _ in range(len(carry_p) + 1):
             body_plan = build_plan(
-                body, partition_size,
+                body, placements,
                 partitioned_invars=body_consts_p + carry_p,
             )
-            out_p = list(body_plan.partitioned_outvars)
-            new_carry = [a or b for a, b in zip(carry_p, out_p)]
+            out_p = list(body_plan.outvar_placements)
+            new_carry = [_join(a, b) for a, b in zip(carry_p, out_p)]
             if new_carry == carry_p:
                 break
             carry_p = new_carry
         # The predicate runs once per iteration too: plan it so communication
         # inside the cond (adaptive stopping) shows up as explicit stages.
         cond_plan = build_plan(
-            params["cond_jaxpr"], partition_size,
+            params["cond_jaxpr"], placements,
             partitioned_invars=cond_consts_p + carry_p,
         )
         stages.append(
@@ -668,7 +809,7 @@ def build_plan(
         branches = eqn.params["branches"]
         ops_p = [is_part(a) for a in eqn.invars[1:]]
         branch_plans = [
-            build_plan(b, partition_size, partitioned_invars=ops_p)
+            build_plan(b, placements, partitioned_invars=ops_p)
             for b in branches
         ]
         stages.append(
@@ -678,9 +819,10 @@ def build_plan(
         )
         for i, o in enumerate(eqn.outvars):
             if not _is_dropvar(o):
-                placed[o] = any(
-                    bp.partitioned_outvars[i] for bp in branch_plans
-                )
+                p = ()
+                for bp in branch_plans:
+                    p = _join(p, bp.outvar_placements[i])
+                placed[o] = p
 
     def emit(eqns):
         for eqn in eqns:
@@ -689,17 +831,53 @@ def build_plan(
                 _contains_comm(sub.jaxpr) for sub in _eqn_subjaxprs(eqn)
             )
             if name == "drjax_broadcast":
-                stages.append(Broadcast(eqn=_rewrite_eqn(eqn, resolve)))
-                for o in eqn.outvars:
-                    if not _is_dropvar(o):
-                        placed[o] = True
-            elif name in _COMM:
+                enames, i = _eqn_placement(eqn)
+                in_pl = is_part(eqn.invars[0])
+                # A broadcast at level i expects a depth-i operand; a deeper
+                # operand on the SAME name chain would duplicate a level the
+                # value already has — the result leaves the prefix lattice.
+                if len(in_pl) > i and in_pl[: i + 1] == enames[: i + 1]:
+                    raise ValueError(
+                        f"broadcast@{enames[i]} over a value already "
+                        f"partitioned at {in_pl}: only the next level of a "
+                        f"value's placement prefix can be broadcast"
+                    )
                 stages.append(
-                    Reduce(op=_COMM[name], eqn=_rewrite_eqn(eqn, resolve))
+                    Broadcast(
+                        eqn=_rewrite_eqn(eqn, resolve),
+                        placement=enames[i],
+                        source=enames[i - 1] if i > 0 else "server",
+                    )
                 )
                 for o in eqn.outvars:
                     if not _is_dropvar(o):
-                        placed[o] = False
+                        placed[o] = enames[: i + 1]
+            elif name in _COMM:
+                enames, i = _eqn_placement(eqn)
+                in_pl = is_part(eqn.invars[0])
+                # Reducing an OUTER level of a deeper value (e.g.
+                # reduce@pods of a (pods, clients) value) would yield
+                # "clients without pods" — not a stack prefix, so neither
+                # this lattice nor the Beam keying can represent it. Fail
+                # loudly instead of emitting a wrong pipeline.
+                if len(in_pl) > i + 1 and in_pl[: i + 1] == enames[: i + 1]:
+                    raise ValueError(
+                        f"{_COMM[name]}@{enames[i]} reduces an outer level "
+                        f"of a value partitioned at {in_pl}: only the "
+                        f"innermost level of a value's placement prefix can "
+                        f"be reduced (reduce {in_pl[-1]!r} first)"
+                    )
+                stages.append(
+                    Reduce(
+                        op=_COMM[name],
+                        eqn=_rewrite_eqn(eqn, resolve),
+                        placement=enames[i],
+                        dest=enames[i - 1] if i > 0 else "server",
+                    )
+                )
+                for o in eqn.outvars:
+                    if not _is_dropvar(o):
+                        placed[o] = enames[:i]
             elif name == "scan" and has_comm:
                 emit_scan(eqn)
             elif name == "while" and has_comm:
@@ -712,21 +890,27 @@ def build_plan(
                 inline_call(eqn, sub)
             else:
                 eqn2 = _rewrite_eqn(eqn, resolve)
-                at_groups = any(is_part(a) for a in eqn.invars)
+                p = ()
+                for a in eqn.invars:
+                    p = _join(p, is_part(a))
                 for o in eqn.outvars:
                     if not _is_dropvar(o):
-                        placed[o] = at_groups
-                append_local(eqn2, at_groups)
+                        placed[o] = p
+                append_local(eqn2, bool(p))
 
     emit(jaxpr.eqns)
 
     out_atoms = tuple(resolve(v) for v in jaxpr.outvars)
+    outvar_placements = tuple(is_part(a) for a in jaxpr.outvars)
     plan = MapReducePlan(
         jaxpr=closed,
-        partition_size=partition_size,
+        partition_size=total,
         stages=stages,
-        partitioned_invars=partitioned_invars,
-        partitioned_outvars=tuple(is_part(a) for a in jaxpr.outvars),
+        partitioned_invars=tuple(len(p) for p in invar_placements),
+        partitioned_outvars=tuple(len(p) for p in outvar_placements),
+        placements=placements,
+        invar_placements=invar_placements,
+        outvar_placements=outvar_placements,
         extra_consts=extra_consts,
         out_atoms=out_atoms,
     )
@@ -913,6 +1097,21 @@ def _reduce_mean(vals):
 
 def _reduce_max(vals):
   return np.max(np.stack(list(vals)), axis=0)
+
+
+def _lift(v, k):
+  # One group's element -> a rank-(k + v.ndim) stack slice: group stages
+  # apply the sliced (group-batched) jaxpr, which expects k leading group
+  # axes (one per placement level of the value).
+  v = np.asarray(v)
+  return v.reshape((1,) * k + v.shape)
+
+
+def _unkey(rows, shape):
+  # (key_tuple, value) pairs -> one stacked array with the placement-stack
+  # axes restored (row-major over the sorted key tuples).
+  arr = np.stack([v for _, v in sorted(rows)])
+  return arr.reshape(tuple(shape) + arr.shape[1:])
 """
 
 
@@ -931,6 +1130,11 @@ class _BeamEmitter:
         # broadcast output name -> (pre-broadcast source name, source kind);
         # lets a reduce over a broadcast re-materialize the n replicas
         self.side_src: Dict[str, Tuple[str, str]] = {}
+        # Nested plans key partitioned PCollections by placement-path
+        # TUPLES (g0, g1, ...); flat plans keep legacy int keys.
+        self.nested = len(plan.placements) > 1
+        # identifier -> number of key levels for "group"-kind values
+        self.depths: Dict[str, int] = {}
         # consts[i] indices, matching plan.beam_consts()
         self._const_index: Dict[Any, int] = {}
         for p in _all_plans(plan):
@@ -996,20 +1200,39 @@ class _BeamEmitter:
         if kind == "group":
             return name
         out = self.fresh("g")
+        n0 = self.plan.placement_sizes[0]
         if kind == "plain":
-            self.assign(
-                out, f"p | {self.label()} >> beam.Create(list(enumerate({name})))",
-                "group", "key by group",
-            )
+            if self.nested:
+                self.assign(
+                    out,
+                    f"p | {self.label()} >> beam.Create("
+                    f"[((j,), {name}[j]) for j in range({n0})])",
+                    "group", "key by group (placement path)",
+                )
+            else:
+                self.assign(
+                    out,
+                    f"p | {self.label()} >> beam.Create(list(enumerate({name})))",
+                    "group", "key by group",
+                )
         elif kind == "server":
-            self.assign(
-                out,
-                f"{name} | {self.label()} >> "
-                f"beam.FlatMap(lambda v: list(enumerate(v)))",
-                "group", "key by group",
-            )
+            if self.nested:
+                self.assign(
+                    out,
+                    f"{name} | {self.label()} >> "
+                    f"beam.FlatMap(lambda v: [((j,), v[j]) for j in range({n0})])",
+                    "group", "key by group (placement path)",
+                )
+            else:
+                self.assign(
+                    out,
+                    f"{name} | {self.label()} >> "
+                    f"beam.FlatMap(lambda v: list(enumerate(v)))",
+                    "group", "key by group",
+                )
         else:  # side input object: no pipeline handle; leave a typed hole
             self.assign(out, f"{name}", "group", "side input reused per group")
+        self.depths[out] = 1
         return out
 
     def to_server(self, name: str) -> str:
@@ -1017,13 +1240,24 @@ class _BeamEmitter:
         if kind in ("server", "plain", "side"):
             return name
         out = self.fresh("s")
-        self.assign(
-            out,
-            f"{name} | {self.label()} >> beam.combiners.ToList() "
-            f"| {self.label()} >> "
-            f"beam.Map(lambda rows: np.stack([v for _, v in sorted(rows)]))",
-            "server", "collect groups to a stacked server value",
-        )
+        depth = self.depths.get(name, 1)
+        if self.nested or depth > 1:
+            sizes = self.plan.placement_sizes[:depth]
+            self.assign(
+                out,
+                f"{name} | {self.label()} >> beam.combiners.ToList() "
+                f"| {self.label()} >> "
+                f"beam.Map(lambda rows: _unkey(rows, {tuple(sizes)!r}))",
+                "server", "collect groups to a stacked server value",
+            )
+        else:
+            self.assign(
+                out,
+                f"{name} | {self.label()} >> beam.combiners.ToList() "
+                f"| {self.label()} >> "
+                f"beam.Map(lambda rows: np.stack([v for _, v in sorted(rows)]))",
+                "server", "collect groups to a stacked server value",
+            )
         return out
 
     # -- emission ------------------------------------------------------------
@@ -1035,22 +1269,46 @@ class _BeamEmitter:
         self.lines.append("")
         self.lines.append("def build_pipeline(p, args, fns, consts=()):")
         n = plan.partition_size
-        self.assign(
-            "groups",
-            f"p | 'Groups' >> beam.Create([(g, ()) for g in range({n})])",
-            "group", "one element per group",
-        )
+        if self.nested:
+            all_sizes = tuple(plan.placement_sizes)
+            self.assign(
+                "groups",
+                f"p | 'Groups' >> beam.Create("
+                f"[(idx, ()) for idx in np.ndindex(*{all_sizes!r})])",
+                "group", "one element per innermost group (placement path)",
+            )
+            self.depths["groups"] = len(all_sizes)
+        else:
+            self.assign(
+                "groups",
+                f"p | 'Groups' >> beam.Create([(g, ()) for g in range({n})])",
+                "group", "one element per group",
+            )
+            self.depths["groups"] = 1
         for i, (v, part) in enumerate(
             zip(plan.jaxpr.jaxpr.invars, plan.partitioned_invars)
         ):
             name = self.fresh("in_")
-            if part:
+            k = int(part)
+            if k and (self.nested or k > 1):
+                sizes = tuple(plan.placement_sizes[:k])
+                self.assign(
+                    name,
+                    f"p | {self.label()} >> beam.Create("
+                    f"[(idx, args[{i}][idx]) for idx in "
+                    f"np.ndindex(*{sizes!r})])",
+                    "group",
+                    f"plan input {i} @{'/'.join(plan.invar_placements[i])}",
+                )
+                self.depths[name] = k
+            elif k:
                 self.assign(
                     name,
                     f"p | {self.label()} >> "
                     f"beam.Create(list(enumerate(args[{i}])))",
                     "group", f"plan input {i} @GROUPS",
                 )
+                self.depths[name] = 1
             else:
                 self.assign(
                     name,
@@ -1077,10 +1335,55 @@ class _BeamEmitter:
             elif isinstance(stage, CondStage):
                 self.emit_cond(stage, plan, f"{prefix}{i}")
 
+    def _stage_placement(self, stage) -> Tuple[int, int]:
+        """(addressed stack index, addressed placement size) of a comm eqn."""
+        pctx = stage.eqn.params.get("pctx")
+        if pctx is None:
+            return 0, self.plan.partition_size
+        i = pctx.index_of(stage.eqn.params.get("placement"))
+        return i, pctx.placements[i].size
+
     def emit_broadcast(self, stage: Broadcast, plan):
         src = self.name_of(stage.eqn.invars[0], plan)
         out = self.fresh("bc")
-        if self.kinds.get(src) == "server":
+        i, size = self._stage_placement(stage)
+        kind = self.kinds.get(src, "plain")
+        if self.nested or i > 0:
+            # Nested stacks materialize keyed PCollections (placement-path
+            # tuple keys) instead of side inputs, so a later broadcast@inner
+            # can extend the key and a reduce@inner can shorten it.
+            tag = f"BROADCAST {stage.source}->{stage.placement}"
+            if kind == "group":
+                self.assign(
+                    out,
+                    f"{src} | {self.label()} >> beam.FlatMap("
+                    f"lambda kv: [(kv[0] + (j,), kv[1]) "
+                    f"for j in range({size})])",
+                    "group", f"{tag} (extend placement path)",
+                )
+                self.depths[out] = self.depths.get(src, 1) + 1
+            elif kind == "server":
+                self.assign(
+                    out,
+                    f"p | {self.label()} >> beam.Create("
+                    f"[(j,) for j in range({size})]) "
+                    f"| {self.label()} >> beam.Map("
+                    f"lambda k, _v: ((k,) if not isinstance(k, tuple) "
+                    f"else k, _v), beam.pvalue.AsSingleton({src}))",
+                    "group", f"{tag} (materialized per group)",
+                )
+                self.depths[out] = 1
+            else:  # plain python value
+                self.assign(
+                    out,
+                    f"p | {self.label()} >> beam.Create("
+                    f"[((j,), {src}) for j in range({size})])",
+                    "group", f"{tag} (materialized per group)",
+                )
+                self.depths[out] = 1
+            self.bind(stage.eqn.outvars[0], out)
+            return
+        if kind == "server":
             self.assign(
                 out, f"beam.pvalue.AsSingleton({src})", "side",
                 "BROADCAST server->groups (side input)",
@@ -1096,7 +1399,32 @@ class _BeamEmitter:
         combiner = f"_{stage.op}"
         out = self.fresh("r")
         kind = self.kinds.get(src, "plain")
-        n = plan.partition_size
+        i, n = self._stage_placement(stage)
+        if kind == "group":
+            depth = self.depths.get(src, 1)
+            if depth >= 2:
+                # An inner-placement reduce: shorten the placement path by
+                # one level and combine per remaining key — one shuffle per
+                # stage, so a hierarchical reduce stages as two shuffles.
+                self.assign(
+                    out,
+                    f"{src} | {self.label()} >> beam.Map("
+                    f"lambda kv: (kv[0][:-1], kv[1])) "
+                    f"| {self.label()} >> beam.CombinePerKey({combiner})",
+                    "group",
+                    f"{stage.op.upper()} {stage.placement}->{stage.dest} "
+                    f"(combine per {stage.dest})",
+                )
+                self.depths[out] = depth - 1
+                self.bind(stage.eqn.outvars[0], out)
+                return
+            if i + 1 != depth:
+                self.line(
+                    f"# NOTE: {stage.op}@{stage.placement} crosses a "
+                    f"placement-regrouping boundary (value tracked at "
+                    f"depth {depth}, eqn addresses level {i}); the global "
+                    f"combine below approximates the per-{stage.dest} stage"
+                )
         if src in self.side_src:
             # reducing a broadcast directly: combine n replicas of the
             # pre-broadcast server value (AsSingleton objects aren't listable)
@@ -1134,7 +1462,16 @@ class _BeamEmitter:
         raw = self.fresh("o")
         if stage.at_groups:
             self.emit_group_stage(sname, in_names, raw)
-            project = "lambda kv, _j={j}: (kv[0], kv[1][_j][0])"
+            k = self.depths.get(raw, 1)
+            if k > 1:
+                # the stage fn returned k leading singleton group axes —
+                # strip all of them when projecting this group's element
+                unwrap = repr((0,) * k)
+                project = (
+                    "lambda kv, _j={j}: (kv[0], kv[1][_j][" + unwrap + "])"
+                )
+            else:
+                project = "lambda kv, _j={j}: (kv[0], kv[1][_j][0])"
         else:
             self.emit_server_stage(sname, in_names, raw)
             project = "lambda _t, _j={j}: _t[_j]"
@@ -1149,6 +1486,7 @@ class _BeamEmitter:
                     f"beam.Map({project.format(j=j)})",
                     self.kinds[raw],
                 )
+                self.depths[name] = self.depths.get(raw, 1)
             self.bind(o, name)
 
     def emit_server_stage(self, sname: str, in_names: List[str], raw: str):
@@ -1186,6 +1524,15 @@ class _BeamEmitter:
 
     def emit_group_stage(self, sname: str, in_names: List[str], raw: str):
         kinds = [self.kinds.get(n, "plain") for n in in_names]
+        gdepths = [
+            self.depths.get(n, 1) if k == "group" else 0
+            for n, k in zip(in_names, kinds)
+        ]
+        if self.nested or any(d > 1 for d in gdepths):
+            self._emit_group_stage_nested(
+                sname, in_names, kinds, gdepths, raw
+            )
+            return
         main = next(
             (n for n, k in zip(in_names, kinds) if k == "group"), None
         )
@@ -1222,6 +1569,57 @@ class _BeamEmitter:
             f"{main} | {self.label()} >> beam.Map({lam}{extra})",
             "group", f"GROUP_COMPUTE {sname} (per group)",
         )
+        self.depths[raw] = 1
+
+    def _emit_group_stage_nested(
+        self, sname: str, in_names, kinds, gdepths, raw: str
+    ):
+        """Placement-path (tuple-keyed) variant of a group stage.
+
+        The Map is keyed on the deepest group input; shallower group inputs
+        are joined by their key *prefix* (kv[0][:depth]) — a pod-partitioned
+        side value joins every client of that pod. Each group element is
+        lifted to its own number of leading singleton group axes before the
+        sliced (group-batched) stage fn sees it."""
+        main, main_depth = None, 0
+        for n, k, d in zip(in_names, kinds, gdepths):
+            if k == "group" and d > main_depth:
+                main, main_depth = n, d
+        if main is None:
+            main = "groups"
+            main_depth = self.depths.get("groups", 1)
+        params, extras, exprs = ["kv"], [], []
+        used_main = False
+        for n, k, d in zip(in_names, kinds, gdepths):
+            if n == main and not used_main:
+                used_main = True
+                exprs.append(f"_lift(kv[1], {main_depth})")
+            elif k == "group":
+                pname = f"_d{len(params)}"
+                params.append(pname)
+                exprs.append(f"_lift({pname}[kv[0][:{d}]], {d})")
+                extras.append(f"beam.pvalue.AsDict({n})")
+            elif k == "server":
+                pname = f"_s{len(params)}"
+                params.append(pname)
+                exprs.append(pname)
+                extras.append(f"beam.pvalue.AsSingleton({n})")
+            else:  # side input object or plain value: pass through
+                pname = f"_x{len(params)}"
+                params.append(pname)
+                exprs.append(pname)
+                extras.append(n)
+        lam = (
+            f"lambda {', '.join(params)}: "
+            f"(kv[0], fns['{sname}']({', '.join(exprs)}))"
+        )
+        extra = (", " + ", ".join(extras)) if extras else ""
+        self.assign(
+            raw,
+            f"{main} | {self.label()} >> beam.Map({lam}{extra})",
+            "group", f"GROUP_COMPUTE {sname} (per placement path)",
+        )
+        self.depths[raw] = main_depth
 
     def emit_loop(self, stage: LoopStage, plan, path: str, outs):
         eqn = stage.eqn

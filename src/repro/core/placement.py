@@ -1,26 +1,74 @@
-"""Placement context for DrJAX programs.
+"""Placement stack for DrJAX programs.
 
 A *placement* names a logical partition (e.g. ``"clients"``) and carries its
 cardinality (the number of groups). DrJAX decouples this logical cardinality
 from physical devices: a partition of size ``n`` may be sharded over any ``m``
 devices with ``m | n`` (paper §3, "Sharding DrJAX computations").
 
-The context also carries the *mesh axes* that the partition's leading array
-axis should be sharded over, and whether sharding annotations are installed at
-all (``use_sharding_annotations=False`` reproduces the paper's DrJAX-NS
-ablation, Fig. 6).
+Placements NEST (paper §6, "hierarchical placements"): a context may hold an
+ordered stack of named placements, outermost first — e.g.
+``{"pods": P, "clients": m}`` models ``m`` clients inside each of ``P`` pods.
+A value partitioned at depth ``k`` carries the ``k`` outermost placements'
+group axes as its ``k`` leading array axes, in stack order; depth 0 is the
+server. Placement-sets therefore form a chain of stack prefixes — the
+placement lattice the §5 interpreter solves over.
+
+Each placement carries its *own* mesh axes, so its group axis pins its own
+slice of the device mesh (pods over the slow DCN axis, clients over ICI), and
+whether sharding annotations are installed at all
+(``use_sharding_annotations=False`` reproduces the paper's DrJAX-NS ablation,
+Fig. 6).
+
+The single-placement context of the paper's API is the one-entry degenerate
+case: every legacy accessor (``partition_size``, ``partition_axes``,
+``axes_tuple`` …) reads the innermost placement.
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 import threading
-from typing import Optional, Sequence, Tuple, Union
+from typing import Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 
 AxisSpec = Union[str, Tuple[str, ...], None]
+
+
+def _axes_tuple(axes: AxisSpec) -> Tuple[str, ...]:
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """One named level of the placement stack.
+
+    Attributes:
+      name: logical name of the partition ("clients", "pods", ...).
+      size: number of groups at this level.
+      axes: mesh axis name(s) this level's group axis is sharded over, e.g.
+        ``"data"`` or ``("pod", "data")``. ``None`` means no sharding
+        constraint for this level (purely logical).
+    """
+
+    name: str
+    size: int
+    axes: AxisSpec = None
+
+    def __post_init__(self):
+        if self.size < 1:
+            raise ValueError(
+                f"placement {self.name!r} must have size >= 1, got {self.size}"
+            )
+
+    def axes_tuple(self) -> Tuple[str, ...]:
+        return _axes_tuple(self.axes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,12 +76,8 @@ class PlacementContext:
     """Ambient configuration for DrJAX primitives.
 
     Attributes:
-      placement: logical name of the partition ("clients" by default — the
-        paper's federated heritage — but any name works).
-      partition_size: number of groups n in the partition.
-      partition_axes: mesh axis name(s) the leading (partition) array axis is
-        sharded over, e.g. ``"data"`` or ``("pod", "data")``. ``None`` means
-        no sharding constraint is emitted (DrJAX-NS).
+      placements: the placement stack, outermost first. A value partitioned
+        at depth k leads with the k outermost placements' group axes.
       mesh: optional concrete mesh. If ``None``, sharding constraints use the
         ambient mesh (``repro.compat.set_mesh``, which picks the right
         mechanism for the installed JAX version).
@@ -43,26 +87,85 @@ class PlacementContext:
         ``jax.vmap`` (the *dynamic* sharding annotations on intermediates).
     """
 
-    placement: str = "clients"
-    partition_size: int = 1
-    partition_axes: AxisSpec = None
+    placements: Tuple[Placement, ...] = (Placement("clients", 1),)
     mesh: Optional[jax.sharding.Mesh] = None
     use_sharding_annotations: bool = True
     use_spmd_axis_name: bool = True
 
-    def axes_tuple(self) -> Tuple[str, ...]:
-        if self.partition_axes is None:
-            return ()
-        if isinstance(self.partition_axes, str):
-            return (self.partition_axes,)
-        return tuple(self.partition_axes)
+    def __post_init__(self):
+        if not self.placements:
+            raise ValueError("PlacementContext needs at least one placement")
+        names = [p.name for p in self.placements]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate placement names: {names}")
 
-    def spmd_axis_name(self):
-        axes = self.axes_tuple()
-        if not axes or not self.use_sharding_annotations or not self.use_spmd_axis_name:
+    # -- stack accessors ----------------------------------------------------
+
+    @property
+    def depth(self) -> int:
+        """Number of stacked placements (1 for the paper's flat API)."""
+        return len(self.placements)
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(p.name for p in self.placements)
+
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        return tuple(p.size for p in self.placements)
+
+    @property
+    def innermost(self) -> Placement:
+        return self.placements[-1]
+
+    def index_of(self, name: Optional[str]) -> int:
+        """Stack index of a placement; ``None`` addresses the innermost."""
+        if name is None:
+            return self.depth - 1
+        for i, p in enumerate(self.placements):
+            if p.name == name:
+                return i
+        raise KeyError(
+            f"no placement named {name!r} in this context "
+            f"(have {list(self.names)})"
+        )
+
+    def get(self, name: Optional[str]) -> Placement:
+        return self.placements[self.index_of(name)]
+
+    def total_size(self) -> int:
+        """Total number of innermost groups across the whole stack."""
+        return math.prod(self.sizes)
+
+    def spmd_axis_name_for(self, placement: Optional[str] = None):
+        """The vmap ``spmd_axis_name`` for one placement level (or None)."""
+        if not self.use_sharding_annotations or not self.use_spmd_axis_name:
+            return None
+        axes = self.get(placement).axes_tuple()
+        if not axes:
             return None
         # jax.vmap accepts a single name or a tuple of names.
         return axes if len(axes) > 1 else axes[0]
+
+    # -- legacy single-placement surface (innermost placement) --------------
+
+    @property
+    def placement(self) -> str:
+        return self.innermost.name
+
+    @property
+    def partition_size(self) -> int:
+        return self.innermost.size
+
+    @property
+    def partition_axes(self) -> AxisSpec:
+        return self.innermost.axes
+
+    def axes_tuple(self) -> Tuple[str, ...]:
+        return self.innermost.axes_tuple()
+
+    def spmd_axis_name(self):
+        return self.spmd_axis_name_for(None)
 
 
 class _ContextStack(threading.local):
@@ -96,21 +199,69 @@ def placement_context(ctx: PlacementContext):
         _CTX.stack.pop()
 
 
+def _normalize_axes(
+    names: Sequence[str], partition_axes
+) -> Tuple[AxisSpec, ...]:
+    """Per-placement mesh axes from the user-facing ``partition_axes`` arg.
+
+    Accepts a mapping {placement_name: axes}, or (single placement only) the
+    legacy bare axis spec applied to that placement.
+    """
+    if isinstance(partition_axes, Mapping):
+        unknown = set(partition_axes) - set(names)
+        if unknown:
+            raise ValueError(
+                f"partition_axes names unknown placements {sorted(unknown)}; "
+                f"placements are {list(names)}"
+            )
+        return tuple(partition_axes.get(n) for n in names)
+    if len(names) == 1:
+        return (partition_axes,)
+    if partition_axes is None:
+        return tuple(None for _ in names)
+    raise ValueError(
+        "with multiple placements, partition_axes must be a mapping "
+        "{placement_name: mesh_axes} (or None)"
+    )
+
+
 def make_context(
-    partition_size: int,
+    partition_size: Optional[int] = None,
     *,
     placement: str = "clients",
-    partition_axes: AxisSpec = "data",
+    placements: Optional[Mapping[str, int]] = None,
+    partition_axes=None,
     mesh: Optional[jax.sharding.Mesh] = None,
     use_sharding_annotations: bool = True,
     use_spmd_axis_name: bool = True,
 ) -> PlacementContext:
-    if partition_size < 1:
-        raise ValueError(f"partition_size must be >= 1, got {partition_size}")
+    """Build a context from either the flat or the stacked spec.
+
+    ``make_context(n)`` — the paper's single placement of size n.
+    ``make_context(placements={"pods": P, "clients": m})`` — a nested stack,
+    outermost first (mapping order is the stack order).
+    """
+    if placements is not None:
+        if partition_size is not None:
+            raise ValueError("pass either partition_size or placements, not both")
+        if not placements:
+            raise ValueError("placements mapping must not be empty")
+        names = tuple(placements)
+        sizes = tuple(placements.values())
+    else:
+        if partition_size is None:
+            raise ValueError("partition_size (or placements) is required")
+        if partition_size < 1:
+            raise ValueError(
+                f"partition_size must be >= 1, got {partition_size}"
+            )
+        names, sizes = (placement,), (partition_size,)
+    axes = _normalize_axes(names, partition_axes)
+    stack = tuple(
+        Placement(n, s, a) for n, s, a in zip(names, sizes, axes)
+    )
     return PlacementContext(
-        placement=placement,
-        partition_size=partition_size,
-        partition_axes=partition_axes,
+        placements=stack,
         mesh=mesh,
         use_sharding_annotations=use_sharding_annotations,
         use_spmd_axis_name=use_spmd_axis_name,

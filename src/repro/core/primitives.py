@@ -14,21 +14,29 @@ as the paper describes (§3 "Implementation"):
 * **batching rules** — primitives survive ``jax.vmap``, so outer-loop
   transforms (hyperparameter sweeps, per-example clipping) compose.
 * **sharding annotations** — each primitive's lowering constrains the leading
-  (partition) axis onto the mesh axes in the ambient
+  (partition) axes onto the mesh axes of the ambient
   :class:`~repro.core.placement.PlacementContext` (static annotations). The
   context travels in the primitive *params*, so annotations survive into
   transpose rules that fire outside the user's trace (e.g. inside
   ``jax.grad``'s backward pass).
 
-Partitioned values are arrays with a leading group axis (paper Fig. 1); all
+Every primitive is *placement-addressed*: it binds with a ``placement``
+param naming one level of the placement stack (default: innermost). For a
+placement at stack index ``i``, ``broadcast`` takes a value partitioned at
+the ``i`` outer placements (depth i) and inserts that placement's group axis
+at position ``i`` (depth i+1); ``reduce_*`` removes it. The bound placement
+travels in the params alongside the context, so AD transposes
+(broadcast-at-p ↔ reduce_sum-at-p) and batching stay placement-correct.
+
+Partitioned values are arrays whose leading axes are the group axes of a
+stack *prefix* (paper Fig. 1; depth k == k leading group axes); all
 primitives here operate on single arrays and are mapped over pytrees by
 :mod:`repro.core.api`.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,19 +67,35 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 
-def _check_partitioned(x_aval, pctx: placement_lib.PlacementContext, prim: str):
-    if x_aval.ndim < 1:
+def _resolve(
+    pctx: placement_lib.PlacementContext, placement: Optional[str]
+) -> Tuple[placement_lib.Placement, int]:
+    """The addressed placement and its stack index (None = innermost)."""
+    idx = pctx.index_of(placement)
+    return pctx.placements[idx], idx
+
+
+def _check_operand_depth(
+    x_aval, pctx: placement_lib.PlacementContext, depth: int, prim: str
+):
+    """Operand must carry the ``depth`` outermost placements' group axes."""
+    if x_aval.ndim < depth:
         raise ValueError(
-            f"drjax.{prim} expects a partitioned array with a leading group "
-            f"axis; got a scalar."
+            f"drjax.{prim} at placement "
+            f"'{pctx.placements[depth - 1].name}' expects a value partitioned "
+            f"at the {depth} outer placement(s) "
+            f"{list(pctx.names[:depth])}; got a "
+            f"{'scalar' if x_aval.ndim == 0 else f'rank-{x_aval.ndim} array'}."
         )
-    if x_aval.shape[0] != pctx.partition_size:
-        raise ValueError(
-            f"drjax.{prim}: leading axis ({x_aval.shape[0]}) does not match "
-            f"the partition size ({pctx.partition_size}) of placement "
-            f"'{pctx.placement}'. Partitioned values must carry one leading "
-            f"entry per group."
-        )
+    for j in range(depth):
+        pl = pctx.placements[j]
+        if x_aval.shape[j] != pl.size:
+            raise ValueError(
+                f"drjax.{prim}: axis {j} ({x_aval.shape[j]}) does not match "
+                f"the partition size ({pl.size}) of placement "
+                f"'{pl.name}'. Partitioned values must carry one leading "
+                f"entry per group at every placement of the stack prefix."
+            )
 
 
 # ---------------------------------------------------------------------------
@@ -81,13 +105,22 @@ def _check_partitioned(x_aval, pctx: placement_lib.PlacementContext, prim: str):
 broadcast_p = Primitive("drjax_broadcast")
 
 
-def _broadcast_impl(x, *, pctx: placement_lib.PlacementContext):
-    out = jnp.broadcast_to(x[None], (pctx.partition_size,) + x.shape)
-    return sharding_lib.constrain_partitioned(out, pctx)
+def _broadcast_impl(
+    x, *, pctx: placement_lib.PlacementContext, placement: Optional[str] = None
+):
+    pl, i = _resolve(pctx, placement)
+    out = jnp.broadcast_to(
+        jnp.expand_dims(x, i), x.shape[:i] + (pl.size,) + x.shape[i:]
+    )
+    return sharding_lib.constrain_partitioned(out, pctx, depth=i + 1)
 
 
-def _broadcast_abstract(x, *, pctx):
-    return core.ShapedArray((pctx.partition_size,) + x.shape, x.dtype)
+def _broadcast_abstract(x, *, pctx, placement=None):
+    pl, i = _resolve(pctx, placement)
+    _check_operand_depth(x, pctx, i, "broadcast")
+    return core.ShapedArray(
+        x.shape[:i] + (pl.size,) + x.shape[i:], x.dtype
+    )
 
 
 broadcast_p.def_impl(_broadcast_impl)
@@ -97,36 +130,39 @@ mlir.register_lowering(
 )
 
 
-def _broadcast_jvp(primals, tangents, *, pctx):
+def _broadcast_jvp(primals, tangents, *, pctx, placement=None):
     (x,), (t,) = primals, tangents
-    out = broadcast_p.bind(x, pctx=pctx)
+    out = broadcast_p.bind(x, pctx=pctx, placement=placement)
     if isinstance(t, ad.Zero):
         t_out = ad.Zero(core.get_aval(out).to_tangent_aval())
     else:
-        t_out = broadcast_p.bind(t, pctx=pctx)
+        t_out = broadcast_p.bind(t, pctx=pctx, placement=placement)
     return out, t_out
 
 
 ad.primitive_jvps[broadcast_p] = _broadcast_jvp
 
 
-def _broadcast_transpose(ct, x, *, pctx):
-    # d(broadcast)^T = reduce_sum  (MapReduce AD closure; Rush et al. 2023)
+def _broadcast_transpose(ct, x, *, pctx, placement=None):
+    # d(broadcast@p)^T = reduce_sum@p  (MapReduce AD closure; Rush et al. 2023)
     if isinstance(ct, ad.Zero):
         return (ad.Zero(x.aval),)
-    return (reduce_sum_p.bind(ct, pctx=pctx),)
+    return (reduce_sum_p.bind(ct, pctx=pctx, placement=placement),)
 
 
 ad.primitive_transposes[broadcast_p] = _broadcast_transpose
 
 
-def _broadcast_batch(args, dims, *, pctx):
+def _broadcast_batch(args, dims, *, pctx, placement=None):
     (x,), (d,) = args, dims
-    out = broadcast_p.bind(x, pctx=pctx)
     if d is batching.not_mapped:
-        return out, batching.not_mapped
-    # broadcast prepends the partition axis, pushing the batch dim right by 1.
-    return out, d + 1
+        return broadcast_p.bind(x, pctx=pctx, placement=placement), d
+    # Move the batch axis to the end so the placement-prefix axes stay
+    # leading (the addressed placement inserts its axis among them),
+    # preserving the primitive under vmap.
+    x = jnp.moveaxis(x, d, x.ndim - 1)
+    out = broadcast_p.bind(x, pctx=pctx, placement=placement)
+    return out, out.ndim - 1
 
 
 batching.primitive_batchers[broadcast_p] = _broadcast_batch
@@ -137,30 +173,35 @@ batching.primitive_batchers[broadcast_p] = _broadcast_batch
 # ---------------------------------------------------------------------------
 
 
-def _make_reduction(name: str, reduce_fn, jvp_linear: bool):
+def _make_reduction(name: str, reduce_fn):
     p = Primitive(f"drjax_{name}")
 
-    def impl(x, *, pctx: placement_lib.PlacementContext):
-        out = reduce_fn(x, pctx)
-        return sharding_lib.constrain_replicated(out, pctx)
+    def impl(x, *, pctx: placement_lib.PlacementContext, placement=None):
+        pl, i = _resolve(pctx, placement)
+        out = reduce_fn(x, pl, i)
+        if i == 0:
+            return sharding_lib.constrain_replicated(out, pctx)
+        return sharding_lib.constrain_partitioned(out, pctx, depth=i)
 
-    def abstract(x, *, pctx):
-        _check_partitioned(x, pctx, name)
-        return core.ShapedArray(x.shape[1:], x.dtype)
+    def abstract(x, *, pctx, placement=None):
+        _, i = _resolve(pctx, placement)
+        _check_operand_depth(x, pctx, i + 1, name)
+        return core.ShapedArray(x.shape[:i] + x.shape[i + 1 :], x.dtype)
 
     p.def_impl(impl)
     p.def_abstract_eval(abstract)
     mlir.register_lowering(p, mlir.lower_fun(impl, multiple_results=False))
 
-    def batch(args, dims, *, pctx):
+    def batch(args, dims, *, pctx, placement=None):
         (x,), (d,) = args, dims
         if d is batching.not_mapped:
-            return p.bind(x, pctx=pctx), batching.not_mapped
-        # Logical operand: (n, *rest); physical batch dim at d. Move the batch
-        # axis to the end so the partition axis stays leading, preserving the
-        # primitive (and hence jaxpr interpretability) under vmap.
+            return p.bind(x, pctx=pctx, placement=placement), d
+        # Logical operand: (sizes-prefix, *rest); physical batch dim at d.
+        # Move the batch axis to the end so the partition axes stay leading,
+        # preserving the primitive (and hence jaxpr interpretability) under
+        # vmap.
         x = jnp.moveaxis(x, d, x.ndim - 1)
-        out = p.bind(x, pctx=pctx)
+        out = p.bind(x, pctx=pctx, placement=placement)
         return out, out.ndim - 1
 
     batching.primitive_batchers[p] = batch
@@ -168,25 +209,24 @@ def _make_reduction(name: str, reduce_fn, jvp_linear: bool):
 
 
 reduce_sum_p = _make_reduction(
-    "reduce_sum", lambda x, pctx: jnp.sum(x, axis=0), jvp_linear=True
+    "reduce_sum", lambda x, pl, i: jnp.sum(x, axis=i)
 )
 reduce_mean_p = _make_reduction(
-    "reduce_mean", lambda x, pctx: jnp.sum(x, axis=0) / pctx.partition_size,
-    jvp_linear=True,
+    "reduce_mean", lambda x, pl, i: jnp.sum(x, axis=i) / pl.size
 )
 reduce_max_p = _make_reduction(
-    "reduce_max", lambda x, pctx: jnp.max(x, axis=0), jvp_linear=False
+    "reduce_max", lambda x, pl, i: jnp.max(x, axis=i)
 )
 
 
 def _linear_reduction_jvp(p):
-    def jvp(primals, tangents, *, pctx):
+    def jvp(primals, tangents, *, pctx, placement=None):
         (x,), (t,) = primals, tangents
-        out = p.bind(x, pctx=pctx)
+        out = p.bind(x, pctx=pctx, placement=placement)
         if isinstance(t, ad.Zero):
             t_out = ad.Zero(core.get_aval(out).to_tangent_aval())
         else:
-            t_out = p.bind(t, pctx=pctx)
+            t_out = p.bind(t, pctx=pctx, placement=placement)
         return out, t_out
 
     return jvp
@@ -196,25 +236,26 @@ ad.primitive_jvps[reduce_sum_p] = _linear_reduction_jvp(reduce_sum_p)
 ad.primitive_jvps[reduce_mean_p] = _linear_reduction_jvp(reduce_mean_p)
 
 
-def _reduce_sum_transpose(ct, x, *, pctx):
-    # d(reduce_sum)^T = broadcast
+def _reduce_sum_transpose(ct, x, *, pctx, placement=None):
+    # d(reduce_sum@p)^T = broadcast@p
     if isinstance(ct, ad.Zero):
         return (ad.Zero(x.aval),)
-    return (broadcast_p.bind(ct, pctx=pctx),)
+    return (broadcast_p.bind(ct, pctx=pctx, placement=placement),)
 
 
-def _reduce_mean_transpose(ct, x, *, pctx):
-    # d(reduce_mean)^T = broadcast / n
+def _reduce_mean_transpose(ct, x, *, pctx, placement=None):
+    # d(reduce_mean@p)^T = broadcast@p / size(p)
     if isinstance(ct, ad.Zero):
         return (ad.Zero(x.aval),)
-    return (broadcast_p.bind(ct / pctx.partition_size, pctx=pctx),)
+    pl, _ = _resolve(pctx, placement)
+    return (broadcast_p.bind(ct / pl.size, pctx=pctx, placement=placement),)
 
 
 ad.primitive_transposes[reduce_sum_p] = _reduce_sum_transpose
 ad.primitive_transposes[reduce_mean_p] = _reduce_mean_transpose
 
 
-def _reduce_max_jvp(primals, tangents, *, pctx):
+def _reduce_max_jvp(primals, tangents, *, pctx, placement=None):
     """Sub-gradient JVP for the (non-linear) max reduction.
 
     The tangent flows from the arg-max group. Expressed with reduce_sum of a
@@ -222,12 +263,13 @@ def _reduce_max_jvp(primals, tangents, *, pctx):
     (the mask is constant wrt differentiation).
     """
     (x,), (t,) = primals, tangents
-    out = reduce_max_p.bind(x, pctx=pctx)
+    _, i = _resolve(pctx, placement)
+    out = reduce_max_p.bind(x, pctx=pctx, placement=placement)
     if isinstance(t, ad.Zero):
         return out, ad.Zero(core.get_aval(out).to_tangent_aval())
-    hit = (x == out[None]).astype(x.dtype)
-    hit = hit / jnp.maximum(jnp.sum(hit, axis=0, keepdims=True), 1)
-    t_out = reduce_sum_p.bind(hit * t, pctx=pctx)
+    hit = (x == jnp.expand_dims(out, i)).astype(x.dtype)
+    hit = hit / jnp.maximum(jnp.sum(hit, axis=i, keepdims=True), 1)
+    t_out = reduce_sum_p.bind(hit * t, pctx=pctx, placement=placement)
     return out, t_out
 
 
@@ -235,7 +277,7 @@ ad.primitive_jvps[reduce_max_p] = _reduce_max_jvp
 
 
 # ---------------------------------------------------------------------------
-# user-facing single-leaf binders
+# user-facing single-leaf binders (one primitive at one placement)
 # ---------------------------------------------------------------------------
 
 
@@ -243,21 +285,29 @@ def _ctx() -> placement_lib.PlacementContext:
     return placement_lib.current_context()
 
 
-def bind_broadcast(x):
+def _bind_params(placement: Optional[str]):
+    """Resolve the addressed placement to its concrete name at bind time so
+    the eqn params carry an explicit placement tag (the §5 interpreter reads
+    it back without re-resolving defaults)."""
+    ctx = _ctx()
+    return dict(pctx=ctx, placement=ctx.get(placement).name)
+
+
+def bind_broadcast(x, placement: Optional[str] = None):
     x = jnp.asarray(x)
-    return broadcast_p.bind(x, pctx=_ctx())
+    return broadcast_p.bind(x, **_bind_params(placement))
 
 
-def bind_reduce_sum(x):
-    return reduce_sum_p.bind(x, pctx=_ctx())
+def bind_reduce_sum(x, placement: Optional[str] = None):
+    return reduce_sum_p.bind(x, **_bind_params(placement))
 
 
-def bind_reduce_mean(x):
-    return reduce_mean_p.bind(x, pctx=_ctx())
+def bind_reduce_mean(x, placement: Optional[str] = None):
+    return reduce_mean_p.bind(x, **_bind_params(placement))
 
 
-def bind_reduce_max(x):
-    return reduce_max_p.bind(x, pctx=_ctx())
+def bind_reduce_max(x, placement: Optional[str] = None):
+    return reduce_max_p.bind(x, **_bind_params(placement))
 
 
 DRJAX_PRIMITIVES: Tuple[Primitive, ...] = (

@@ -5,11 +5,14 @@ annotations on the partitioned values — installed by the primitives themselves
 — are required for GSPMD to produce weak-scaling code. This module centralizes
 those annotations.
 
-Partitioned values are arrays with a leading "group" axis (paper Fig. 1). We
-shard that leading axis over the mesh axes named in the placement context
-(e.g. ``("pod", "data")`` on the production mesh) and leave the remaining axes
-unconstrained so GSPMD can propagate model-parallel shardings from the
-parameters through the mapped computation.
+Partitioned values are arrays whose leading axes are the group axes of a
+placement-stack prefix (paper Fig. 1; depth k == k leading group axes). Each
+placement pins its *own* mesh axes — on a multi-pod mesh the pods axis shards
+over the slow DCN ``"pod"`` axis while the clients axis shards over ICI
+``"data"`` — and the remaining array dims stay unconstrained so GSPMD can
+propagate model-parallel shardings from the parameters through the mapped
+computation (the paper's composition of partition-, model- and
+within-partition parallelism).
 """
 
 from __future__ import annotations
@@ -27,21 +30,36 @@ from . import placement as placement_lib
 _U = P.UNCONSTRAINED
 
 
-def partition_spec(ctx: placement_lib.PlacementContext, ndim: int) -> Optional[P]:
-    """PartitionSpec sharding the leading (partition) axis of an ndim array.
+def partition_spec(
+    ctx: placement_lib.PlacementContext,
+    ndim: int,
+    depth: Optional[int] = None,
+) -> Optional[P]:
+    """PartitionSpec for an ndim array partitioned at ``depth`` placements.
 
-    Only the partition axis is pinned; trailing dims stay UNCONSTRAINED so
-    GSPMD can propagate model-parallel shardings through the mapped
-    computation (the paper's composition of partition-, model- and
-    within-partition parallelism)."""
-    axes = ctx.axes_tuple()
-    if not axes:
+    The ``depth`` leading group axes each pin their own placement's mesh
+    axes; trailing dims stay UNCONSTRAINED so GSPMD can propagate
+    model-parallel shardings through the mapped computation. Placements with
+    no mesh axes contribute a replicated (None) entry for their group axis.
+    Returns None when nothing would be constrained."""
+    if depth is None:
+        depth = ctx.depth
+    depth = min(depth, ndim)
+    entries = []
+    for pl in ctx.placements[:depth]:
+        axes = pl.axes_tuple()
+        if not axes:
+            entries.append(None)
+        else:
+            entries.append(axes if len(axes) > 1 else axes[0])
+    if all(e is None for e in entries):
         return None
-    leading = axes if len(axes) > 1 else axes[0]
-    return P(leading, *([_U] * (ndim - 1)))
+    return P(*entries, *([_U] * (ndim - depth)))
 
 
-def constrain_partitioned(x, ctx: placement_lib.PlacementContext):
+def constrain_partitioned(
+    x, ctx: placement_lib.PlacementContext, depth: Optional[int] = None
+):
     """Apply the static sharding annotation to a partitioned array (leaf)."""
     if not ctx.use_sharding_annotations:
         return x
@@ -49,7 +67,7 @@ def constrain_partitioned(x, ctx: placement_lib.PlacementContext):
         return x
     if x.ndim == 0:
         return x
-    spec = partition_spec(ctx, x.ndim)
+    spec = partition_spec(ctx, x.ndim, depth)
     if spec is None:
         return x
     return jax.lax.with_sharding_constraint(
@@ -58,18 +76,33 @@ def constrain_partitioned(x, ctx: placement_lib.PlacementContext):
 
 
 def constrain_replicated(x, ctx: placement_lib.PlacementContext):
-    """Annotate a non-partitioned (server/singleton) array: replicated over
-    the partition axes, open elsewhere (GSPMD may keep it model-sharded)."""
+    """Annotate a non-partitioned (server/singleton) array: replicated.
+
+    A server-placed value is one copy shared by every group, so it must be
+    *explicitly* replicated over the partition mesh axes — an
+    all-UNCONSTRAINED spec constrains nothing and lets GSPMD leave a
+    partition axis on a post-reduce value. PartitionSpec cannot express
+    "replicated over these axes, open over those", so the annotation pins
+    full replication (the paper's server placement: server state lives
+    replicated on every device)."""
     if not ctx.use_sharding_annotations or ctx.mesh is None:
         return x
-    axes = ctx.axes_tuple()
-    if not axes or x.ndim == 0:
+    if not any(pl.axes_tuple() for pl in ctx.placements) or x.ndim == 0:
         return x
     return jax.lax.with_sharding_constraint(
-        x, compat.named_sharding(ctx.mesh, P(*([_U] * x.ndim)))
+        x, compat.named_sharding(ctx.mesh, P())
     )
 
 
-def constrain_tree(tree, ctx: placement_lib.PlacementContext, *, partitioned: bool):
-    f = constrain_partitioned if partitioned else constrain_replicated
-    return jax.tree_util.tree_map(lambda x: f(x, ctx), tree)
+def constrain_tree(
+    tree,
+    ctx: placement_lib.PlacementContext,
+    *,
+    partitioned: bool,
+    depth: Optional[int] = None,
+):
+    if partitioned:
+        return jax.tree_util.tree_map(
+            lambda x: constrain_partitioned(x, ctx, depth), tree
+        )
+    return jax.tree_util.tree_map(lambda x: constrain_replicated(x, ctx), tree)

@@ -11,7 +11,7 @@ them; older versions have the equivalent Auto-only semantics).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Dict, Mapping, Optional, Tuple
 
 import jax
 
@@ -48,3 +48,53 @@ def partition_axes_for(mesh: Optional[jax.sharding.Mesh]):
     if "data" in names:
         return "data"
     return None
+
+
+def placement_axes_for(
+    mesh: Optional[jax.sharding.Mesh],
+) -> Optional[Dict[str, str]]:
+    """Per-placement mesh axes for a nested {"pods", "clients"} stack.
+
+    Pods pin the slow DCN ``"pod"`` axis, clients the ICI ``"data"`` axis —
+    the assignment that makes the two legs of a hierarchical reduction land
+    on the interconnects they were designed for. Degrades gracefully: a
+    single-pod mesh leaves pods logical (no pod axis to pin)."""
+    if mesh is None:
+        return None
+    names = mesh.axis_names
+    axes: Dict[str, str] = {}
+    if "pod" in names:
+        axes["pods"] = "pod"
+    if "data" in names:
+        axes["clients"] = "data"
+    return axes or None
+
+
+def mesh_for_placements(
+    placements: Mapping[str, int], model_parallel: int = 1
+) -> jax.sharding.Mesh:
+    """A mesh with one device axis per placement (plus optional "model").
+
+    ``{"pods": P, "clients": m}`` maps to shape ``(P, m[, model])`` with axes
+    ``("pod", "data"[, "model"])`` — the outermost placement owns the
+    slowest interconnect dimension. A single placement yields the classic
+    ``("data"[, "model"])`` mesh. Device count must equal the product (use
+    the dry-run driver's fake devices, or shrink the placements)."""
+    if not placements:
+        raise ValueError("placements must not be empty")
+    sizes = tuple(placements.values())
+    if len(sizes) == 1:
+        shape: Tuple[int, ...] = sizes
+        axes: Tuple[str, ...] = ("data",)
+    elif len(sizes) == 2:
+        shape = sizes
+        axes = ("pod", "data")
+    else:
+        raise ValueError(
+            f"at most two placement levels map onto the (pod, data) mesh; "
+            f"got {len(sizes)}: {list(placements)}"
+        )
+    if model_parallel > 1:
+        shape = shape + (model_parallel,)
+        axes = axes + ("model",)
+    return compat.make_mesh(shape, axes)

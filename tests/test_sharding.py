@@ -118,6 +118,99 @@ def test_logical_partition_decoupled_from_device_count(device_pool):
 
 
 @pytest.mark.slow
+def test_post_reduce_value_is_replicated(device_pool):
+    """Regression: constrain_replicated must actually replicate. The old
+    all-UNCONSTRAINED spec constrained nothing, so GSPMD could leave a
+    partition axis on a post-reduce (server-placed) value."""
+    res = _run(
+        device_pool,
+        """
+        @drjax.program(partition_size=8, partition_axes="data", mesh=mesh)
+        def f(x):
+            y = drjax.broadcast(x)
+            z = drjax.map_fn(lambda a: a * 2.0, y)
+            return drjax.reduce_sum(z)
+
+        x = jnp.ones((1024,), jnp.float32)
+        with compat.set_mesh(mesh):
+            out = jax.jit(f)(x)
+        np.testing.assert_allclose(np.asarray(out), 16.0 * np.ones(1024))
+        print(json.dumps({
+            "replicated": bool(out.sharding.is_fully_replicated),
+        }))
+        """,
+    )
+    assert res["replicated"], "post-reduce value still carries a partition axis"
+
+
+@pytest.mark.slow
+def test_nested_placements_shard_per_placement(device_pool):
+    """A nested {pods, clients} program on a (pod, data) mesh: each
+    placement's group axis pins its own mesh axis and the program computes
+    the right thing under jit."""
+    res = _run(
+        device_pool,
+        """
+        n = jax.device_count()
+        pod_mesh = compat.make_mesh((2, n // 2), ("pod", "data"))
+        from repro.launch.mesh import placement_axes_for
+        axes = placement_axes_for(pod_mesh)
+        assert axes == {"pods": "pod", "clients": "data"}, axes
+
+        @drjax.program(placements={"pods": 2, "clients": n // 2},
+                       partition_axes=axes, mesh=pod_mesh)
+        def f(x):
+            y = drjax.broadcast(x)
+            z = drjax.map_fn(lambda a: a * 2.0, y)
+            partial = drjax.reduce_mean(z, placement="clients")
+            return drjax.reduce_mean(partial, placement="pods")
+
+        x = jnp.ones((64,), jnp.float32)
+        with compat.set_mesh(pod_mesh):
+            lowered = jax.jit(f).lower(x)
+            out = jax.jit(f)(x)
+        np.testing.assert_allclose(np.asarray(out), 2.0 * np.ones(64))
+        print(json.dumps({
+            "ok": True,
+            "has_sharding": "sharding" in lowered.as_text(),
+            "replicated": bool(out.sharding.is_fully_replicated),
+        }))
+        """,
+    )
+    assert res["ok"] and res["has_sharding"] and res["replicated"]
+
+
+@pytest.mark.slow
+def test_flat_hierarchical_reduce_under_mesh(device_pool):
+    """Regression: the flat-API hierarchical_reduce_mean must not pin its
+    derived pods level to a mesh axis its P partials cannot shard over
+    (P=2 pod partials over an 8-way data axis -> the level stays logical)."""
+    res = _run(
+        device_pool,
+        """
+        n = jax.device_count()
+
+        @drjax.program(partition_size=2 * n, partition_axes="data", mesh=mesh)
+        def f(xs):
+            z = drjax.map_fn(lambda a: a * 2.0, xs)
+            return drjax.hierarchical_reduce_mean(z, num_supergroups=2)
+
+        xs = jnp.arange(2 * n, dtype=jnp.float32)
+        with compat.set_mesh(mesh):
+            out = jax.jit(f)(xs)
+        np.testing.assert_allclose(
+            np.asarray(out), 2.0 * np.asarray(xs).mean(), rtol=1e-6
+        )
+        g = jax.jit(jax.grad(lambda v: f(jnp.broadcast_to(v, (2 * n,)))))
+        with compat.set_mesh(mesh):
+            gv = g(jnp.float32(1.0))
+        print(json.dumps({"ok": True, "grad": float(gv)}))
+        """,
+    )
+    assert res["ok"] and abs(res["grad"] - 2.0) < 1e-5
+
+
+@pytest.mark.slow
 def test_spmd_axis_name_annotates_map_intermediates(device_pool):
     """map_fn must pass spmd_axis_name so intermediates carry the data axis."""
     res = _run(
