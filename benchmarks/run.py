@@ -4,6 +4,11 @@ Prints ``name,us_per_call,derived`` CSV. Figures 4/5/6 spawn subprocesses
 with varying fake-device counts; the roofline rows read the dry-run result
 cache (run ``scripts/dryrun_sweep.sh`` first for the full 40-cell table).
 
+The ``hier`` bench maintains ``BENCH_hier.json`` as a per-PR *trajectory*:
+each run appends an entry keyed by the current git SHA (re-runs at the same
+commit replace their entry) instead of overwriting history, so the
+flat/fused/unfused wall-clock triple is trackable across PRs.
+
     PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,...]
 """
 

@@ -26,7 +26,26 @@ if [ -n "$violations" ]; then
 fi
 
 # Examples smoke-run: the quickstart exercises the full authoring surface
-# (flat + nested placements, plan IR, Beam emitter) end to end.
+# (flat + nested placements, plan IR, Beam emitter, fused compressed
+# hierarchical reduce) end to end.
 python examples/quickstart.py > /dev/null
+
+# Fused reduce+compress smoke check: the interpret-mode Pallas kernel must be
+# BITWISE equal to its jnp oracle (fast; full coverage in test_fused_reduce).
+python - <<'PY'
+import jax, jax.numpy as jnp
+from repro.kernels import reduce_compress as rc, ref
+
+x = jax.random.normal(jax.random.PRNGKey(0), (8, 4, 256), jnp.float32)
+q, s = rc.reduce_compress(x, interpret=True)
+qr, sr = ref.reduce_compress_ref(x)
+assert bool(jnp.all(q == qr)) and bool(jnp.all(s == sr)), \
+    "fused reduce_compress kernel diverged from its jnp oracle"
+back = rc.dequant_accumulate(q[None], s[None], interpret=True)
+br = ref.dequant_accumulate_ref(q[None], s[None])
+assert bool(jnp.all(back == br)), \
+    "dequant_accumulate kernel diverged from its jnp oracle"
+print("fused-vs-oracle smoke check: OK")
+PY
 
 exec python -m pytest -q "$@"

@@ -49,6 +49,10 @@ class LocalSGDConfig:
     # When > 0, partition_size counts clients PER POD and the program runs
     # under the nested {"pods": num_pods, "clients": partition_size} stack.
     num_pods: int = 0
+    # Fused reduce+compress fast path for the hierarchical int8 aggregation:
+    # None = auto (fuse when the compressor is recognized), False = force the
+    # generic two-primitive composition, True = insist.
+    fused_reduce: Optional[bool] = None
 
 
 def _tree_sub(a, b):
@@ -200,7 +204,7 @@ def make_hierarchical_local_sgd_round(
             # Two-stage mean with the pod partials (the bytes that cross the
             # DCN leg) optionally compressed.
             mean_delta = drjax.hierarchical_reduce_mean(
-                deltas, compress_fn=pod_compress
+                deltas, compress_fn=pod_compress, use_fused=cfg.fused_reduce
             )
             mean_loss = drjax.hierarchical_reduce_mean(losses)
         updates, new_server_state = server_opt.update(

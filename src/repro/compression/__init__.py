@@ -1,5 +1,21 @@
 """Delta/gradient compression for the reduce path."""
 
-from .api import int8_roundtrip, topk_sparsify, ErrorFeedback
+from .api import (
+    PACK_COLS,
+    ErrorFeedback,
+    PackSpec,
+    flat_pack,
+    flat_unpack,
+    int8_roundtrip,
+    topk_sparsify,
+)
 
-__all__ = ["int8_roundtrip", "topk_sparsify", "ErrorFeedback"]
+__all__ = [
+    "PACK_COLS",
+    "PackSpec",
+    "flat_pack",
+    "flat_unpack",
+    "int8_roundtrip",
+    "topk_sparsify",
+    "ErrorFeedback",
+]

@@ -263,7 +263,28 @@ def masked_reduce_mean(tree, mask, placement: Optional[str] = None):
     return reduce_weighted_mean(tree, mask, placement)
 
 
-def map_fn(fn: Callable, tree, placement: Optional[str] = None):
+def _fused_spmd_names(ctx: placement_lib.PlacementContext):
+    """The combined ``spmd_axis_name`` for one vmap spanning the whole stack.
+
+    Returns ``(ok, names)``: fusable when every level contributes mesh axes
+    (the collapsed group axis shards over their concatenation, outermost
+    first — the same device layout as the nested form) or when no level does
+    (purely logical). A mix is not expressible as one vmap annotation, so
+    the caller falls back to nested vmaps.
+    """
+    per_level = [ctx.spmd_axis_name_for(name) for name in ctx.names]
+    if all(n is None for n in per_level):
+        return True, None
+    if any(n is None for n in per_level):
+        return False, None
+    names = []
+    for n in per_level:
+        names.extend(n if isinstance(n, (tuple, list)) else (n,))
+    return True, tuple(names)
+
+
+def map_fn(fn: Callable, tree, placement: Optional[str] = None,
+           fuse: Optional[bool] = None):
     """Apply ``fn`` pointwise across the groups of a partition (paper §2, BB 2).
 
     ``tree`` is a partitioned structure; if it is a *tuple*, its elements are
@@ -273,10 +294,15 @@ def map_fn(fn: Callable, tree, placement: Optional[str] = None):
     that placement's ``spmd_axis_name`` — vmap's SPMD axis name is what
     installs the paper's *dynamic* sharding annotations on every intermediate
     of the mapped computation, which Fig. 6 shows to be load-bearing for weak
-    scaling. With no ``placement``, the vmaps nest over every level of the
-    stack (outermost level outermost), so on a nested stack ``fn`` still sees
-    one group's slice. The mapped computation itself is inlined into the
-    jaxpr, exactly as in paper Snippet 5.
+    scaling. With no ``placement``, the map spans every level of the stack:
+    the group axes are collapsed into one and a SINGLE vmap runs over the
+    collapsed axis with the levels' spmd axis names combined, so GSPMD sees
+    one sharded loop nest instead of ``depth`` nested ones (``fn`` still sees
+    one group's slice). ``fuse=False`` forces the nested per-level vmaps
+    (bitwise-identical results); the fusion also falls back to them when the
+    levels' mesh-axis annotations cannot be merged into one. The mapped
+    computation itself is inlined into the jaxpr, exactly as in paper
+    Snippet 5.
     """
     ctx = placement_lib.current_context()
     if isinstance(tree, tuple):
@@ -284,9 +310,36 @@ def map_fn(fn: Callable, tree, placement: Optional[str] = None):
     else:
         f = fn
     if placement is None:
-        # Wrap innermost level first so the outermost placement's vmap is the
-        # outermost transform; each level annotates with its own mesh axes.
         depth = ctx.depth
+        fusable, fused_names = (
+            _fused_spmd_names(ctx) if depth >= 2 and fuse is not False
+            else (False, None)
+        )
+        if fusable:
+            sizes = tuple(ctx.sizes)
+            total = ctx.total_size()
+
+            def collapse(x):
+                if x.ndim < depth or x.shape[:depth] != sizes:
+                    raise ValueError(
+                        f"map_fn: a mapped leaf of shape {x.shape} does not "
+                        f"carry the stack's group axes {sizes} as its "
+                        "leading axes."
+                    )
+                return x.reshape((total,) + x.shape[depth:])
+
+            fv = jax.vmap(f, in_axes=0, out_axes=0,
+                          spmd_axis_name=fused_names)
+            out = fv(jax.tree_util.tree_map(collapse, tree))
+            out = jax.tree_util.tree_map(
+                lambda x: x.reshape(sizes + x.shape[1:]), out
+            )
+            return sharding_lib.constrain_tree(
+                out, ctx, partitioned=True, depth=depth
+            )
+        # Nested form: wrap innermost level first so the outermost
+        # placement's vmap is the outermost transform; each level annotates
+        # with its own mesh axes.
         for name in reversed(ctx.names):
             f = jax.vmap(
                 f, in_axes=0, out_axes=0,

@@ -27,14 +27,24 @@ reshape is pure local compute at the pod boundary.
 from __future__ import annotations
 
 import math
+import os
 from typing import Callable, Optional
 
 import jax
+import jax.numpy as jnp
+
+from repro import compression
 
 from . import api
 from . import placement as placement_lib
+from . import primitives as prims
 
 _SUPER = "pods"
+
+# Kill switch for the fused reduce+compress fast path (ROADMAP conventions):
+# set REPRO_NO_FUSED_REDUCE=1 to force the generic two-primitive composition
+# even for recognized compressors. An explicit ``use_fused=True`` overrides.
+_NO_FUSED_ENV = "REPRO_NO_FUSED_REDUCE"
 
 
 def _axes_if_divisible(axes, groups: int, mesh):
@@ -59,10 +69,76 @@ def _axes_if_divisible(axes, groups: int, mesh):
     return axes if groups % devices == 0 else None
 
 
+def _fusable(tree, ctx, compress_fn, use_fused: Optional[bool]) -> bool:
+    """Should this reduction take the fused reduce+compress fast path?
+
+    The fast path engages when the compressor is *recognized* — it carries
+    the ``drjax_fused_compress = "int8"`` tag (``compression.int8_roundtrip``
+    does) — and every leaf is a floating array carrying the stack's group
+    axes. ``use_fused=False`` (or ``REPRO_NO_FUSED_REDUCE=1``) forces the
+    generic two-primitive composition; ``use_fused=True`` insists and raises
+    if the compressor cannot be fused.
+    """
+    tag = getattr(compress_fn, "drjax_fused_compress", None)
+    if use_fused is False:
+        return False
+    if tag != "int8":
+        if use_fused is True:
+            raise ValueError(
+                "use_fused=True requires a fusable compress_fn (one tagged "
+                f"drjax_fused_compress='int8'); got {compress_fn!r}"
+            )
+        return False
+    if use_fused is None and os.environ.get(_NO_FUSED_ENV, "") not in ("", "0"):
+        return False
+    leaves = jax.tree_util.tree_leaves(tree)
+    depth = ctx.depth
+    sizes = tuple(ctx.sizes)
+    for leaf in leaves:
+        if not jnp.issubdtype(jnp.result_type(leaf), jnp.floating):
+            return False
+        if jnp.shape(leaf)[:depth] != sizes:
+            return False
+    return bool(leaves)
+
+
+def _staged_reduce(tree, ctx, compress_fn, use_fused: Optional[bool]):
+    """Bind the two-stage reduction under the ambient (nested) context.
+
+    Fast path: flat-pack the tree (one ``(*groups, R, 256)`` buffer per
+    dtype), bind ``reduce_mean@innermost`` tagged ``compress="int8"`` — a
+    single eqn whose execution is the one-pass Pallas reduce+compress kernel
+    on TPU (fused jnp oracle elsewhere) — then the plain outer reduces, and
+    unpack. The program still stages as placement-tagged REDUCEs, so
+    ``build_plan``/``to_beam`` see the same communication structure as the
+    generic composition.
+    """
+    inner = ctx.names[-1]
+    if _fusable(tree, ctx, compress_fn, use_fused):
+        bufs, spec = compression.flat_pack(
+            tree, lead_ndim=ctx.depth, cols=compression.PACK_COLS
+        )
+        outs = {}
+        for key, buf in bufs.items():
+            v = prims.bind_reduce_mean(buf, placement=inner, compress="int8")
+            for name in reversed(ctx.names[:-1]):
+                v = prims.bind_reduce_mean(v, placement=name)
+            outs[key] = v
+        return compression.flat_unpack(outs, spec, lead_ndim=0)
+    partials = api.reduce_mean(tree, placement=inner)
+    if compress_fn is not None:
+        partials = compress_fn(partials)
+    out = partials
+    for name in reversed(ctx.names[:-1]):
+        out = api.reduce_mean(out, placement=name)
+    return out
+
+
 def hierarchical_reduce_mean(
     tree,
     num_supergroups: Optional[int] = None,
     compress_fn: Optional[Callable] = None,
+    use_fused: Optional[bool] = None,
 ):
     """Two-stage mean over a partitioned structure.
 
@@ -72,6 +148,12 @@ def hierarchical_reduce_mean(
     passed). ``compress_fn`` (e.g. ``repro.compression.int8_roundtrip``) is
     applied to the per-pod partial means — the value that crosses the slow
     leg.
+
+    When ``compress_fn`` is recognized as the int8 wire format, the intra-pod
+    leg runs the fused single-pass reduce+compress kernel instead of the
+    reduce→quantize→dequantize chain (``use_fused``: None = auto, False =
+    force the generic composition, True = insist). Derivatives are identical
+    either way — the roundtrip is straight-through under MapReduce AD.
     """
     ctx = placement_lib.current_context()
 
@@ -85,13 +167,7 @@ def hierarchical_reduce_mean(
                 f"placement stack {dict(zip(ctx.names, ctx.sizes))}, which "
                 f"has {outer_total} slow-link domain(s)"
             )
-        partials = api.reduce_mean(tree, placement=ctx.names[-1])
-        if compress_fn is not None:
-            partials = compress_fn(partials)
-        out = partials
-        for name in reversed(ctx.names[:-1]):
-            out = api.reduce_mean(out, placement=name)
-        return out
+        return _staged_reduce(tree, ctx, compress_fn, use_fused)
 
     # Flat single-placement API: regroup (n, ...) -> (P, n/P, ...) and run the
     # same two primitives inside a derived {pods, <placement>} stack.
@@ -138,12 +214,10 @@ def hierarchical_reduce_mean(
     )
     with placement_lib.placement_context(nested):
         # stage 1: mean within each supergroup (fast leg) — a real reduce
-        # primitive, so the partials carry the pod placement's sharding.
-        partials = api.reduce_mean(regrouped, placement=inner_name)
-        if compress_fn is not None:
-            partials = compress_fn(partials)
-        # stage 2: mean across supergroups (slow leg).
-        return api.reduce_mean(partials, placement=super_name)
+        # primitive, so the partials carry the pod placement's sharding —
+        # then stage 2: mean across supergroups (slow leg). Recognized
+        # compressors take the fused reduce+compress path inside.
+        return _staged_reduce(regrouped, nested, compress_fn, use_fused)
 
 
 def cross_pod_bytes(param_bytes: float, n: int, num_supergroups: int,

@@ -173,17 +173,35 @@ batching.primitive_batchers[broadcast_p] = _broadcast_batch
 # ---------------------------------------------------------------------------
 
 
+def _fused_compress_reduce(x, i, name: str, compress: str, qaxis: int):
+    """Execute a ``compress``-tagged reduction: the fused single-pass
+    reduce+roundtrip (Pallas kernel on TPU, fused jnp oracle elsewhere —
+    see ``repro.kernels.ops.reduce_compress_roundtrip``)."""
+    if name != "reduce_mean" or compress != "int8":
+        raise NotImplementedError(
+            f"drjax.{name}: fused compress={compress!r} is only implemented "
+            "for reduce_mean with int8 (the hierarchical fast path)."
+        )
+    from repro.kernels import ops as kernel_ops  # lazy: keep core import-light
+
+    return kernel_ops.reduce_compress_roundtrip(x, axis=i, qaxis=qaxis)
+
+
 def _make_reduction(name: str, reduce_fn):
     p = Primitive(f"drjax_{name}")
 
-    def impl(x, *, pctx: placement_lib.PlacementContext, placement=None):
+    def impl(x, *, pctx: placement_lib.PlacementContext, placement=None,
+             compress=None, qaxis=-1):
         pl, i = _resolve(pctx, placement)
-        out = reduce_fn(x, pl, i)
+        if compress is not None:
+            out = _fused_compress_reduce(x, i, name, compress, qaxis)
+        else:
+            out = reduce_fn(x, pl, i)
         if i == 0:
             return sharding_lib.constrain_replicated(out, pctx)
         return sharding_lib.constrain_partitioned(out, pctx, depth=i)
 
-    def abstract(x, *, pctx, placement=None):
+    def abstract(x, *, pctx, placement=None, compress=None, qaxis=-1):
         _, i = _resolve(pctx, placement)
         _check_operand_depth(x, pctx, i + 1, name)
         return core.ShapedArray(x.shape[:i] + x.shape[i + 1 :], x.dtype)
@@ -192,16 +210,25 @@ def _make_reduction(name: str, reduce_fn):
     p.def_abstract_eval(abstract)
     mlir.register_lowering(p, mlir.lower_fun(impl, multiple_results=False))
 
-    def batch(args, dims, *, pctx, placement=None):
+    def batch(args, dims, *, pctx, placement=None, compress=None, qaxis=-1):
         (x,), (d,) = args, dims
         if d is batching.not_mapped:
-            return p.bind(x, pctx=pctx, placement=placement), d
+            extra = {} if compress is None else {"compress": compress,
+                                                 "qaxis": qaxis}
+            return p.bind(x, pctx=pctx, placement=placement, **extra), d
+        extra = {} if compress is None else {
+            # The batch axis lands at the end (below), so a from-the-end
+            # quantization axis shifts one step deeper; a from-the-front one
+            # is untouched.
+            "compress": compress,
+            "qaxis": qaxis - 1 if qaxis < 0 else qaxis,
+        }
         # Logical operand: (sizes-prefix, *rest); physical batch dim at d.
         # Move the batch axis to the end so the partition axes stay leading,
         # preserving the primitive (and hence jaxpr interpretability) under
         # vmap.
         x = jnp.moveaxis(x, d, x.ndim - 1)
-        out = p.bind(x, pctx=pctx, placement=placement)
+        out = p.bind(x, pctx=pctx, placement=placement, **extra)
         return out, out.ndim - 1
 
     batching.primitive_batchers[p] = batch
@@ -220,9 +247,14 @@ reduce_max_p = _make_reduction(
 
 
 def _linear_reduction_jvp(p):
-    def jvp(primals, tangents, *, pctx, placement=None):
+    def jvp(primals, tangents, *, pctx, placement=None, **fused):
+        # ``fused`` carries compress/qaxis on the int8 fast-path eqn. The
+        # primal keeps them (fused execution); the tangent drops them: the
+        # roundtrip is straight-through under MapReduce AD, so d(fused
+        # reduce_mean@p) == d(reduce_mean@p) and grad matches the unfused
+        # composition exactly.
         (x,), (t,) = primals, tangents
-        out = p.bind(x, pctx=pctx, placement=placement)
+        out = p.bind(x, pctx=pctx, placement=placement, **fused)
         if isinstance(t, ad.Zero):
             t_out = ad.Zero(core.get_aval(out).to_tangent_aval())
         else:
@@ -236,15 +268,16 @@ ad.primitive_jvps[reduce_sum_p] = _linear_reduction_jvp(reduce_sum_p)
 ad.primitive_jvps[reduce_mean_p] = _linear_reduction_jvp(reduce_mean_p)
 
 
-def _reduce_sum_transpose(ct, x, *, pctx, placement=None):
+def _reduce_sum_transpose(ct, x, *, pctx, placement=None, **fused):
     # d(reduce_sum@p)^T = broadcast@p
     if isinstance(ct, ad.Zero):
         return (ad.Zero(x.aval),)
     return (broadcast_p.bind(ct, pctx=pctx, placement=placement),)
 
 
-def _reduce_mean_transpose(ct, x, *, pctx, placement=None):
-    # d(reduce_mean@p)^T = broadcast@p / size(p)
+def _reduce_mean_transpose(ct, x, *, pctx, placement=None, **fused):
+    # d(reduce_mean@p)^T = broadcast@p / size(p). A compress-tagged eqn
+    # transposes identically: the int8 roundtrip is straight-through.
     if isinstance(ct, ad.Zero):
         return (ad.Zero(x.aval),)
     pl, _ = _resolve(pctx, placement)
@@ -302,8 +335,17 @@ def bind_reduce_sum(x, placement: Optional[str] = None):
     return reduce_sum_p.bind(x, **_bind_params(placement))
 
 
-def bind_reduce_mean(x, placement: Optional[str] = None):
-    return reduce_mean_p.bind(x, **_bind_params(placement))
+def bind_reduce_mean(x, placement: Optional[str] = None, *,
+                     compress: Optional[str] = None, qaxis: int = -1):
+    """``compress="int8"`` tags the eqn for the fused single-pass
+    reduce+roundtrip execution (``qaxis`` = the partial's axis that carries
+    the per-row-block scales). The params are only attached when set, so
+    plain reductions keep their exact eqn signature."""
+    if compress is None:
+        return reduce_mean_p.bind(x, **_bind_params(placement))
+    return reduce_mean_p.bind(
+        x, compress=compress, qaxis=qaxis, **_bind_params(placement)
+    )
 
 
 def bind_reduce_max(x, placement: Optional[str] = None):

@@ -1,0 +1,159 @@
+"""Pallas TPU kernels: fused intra-pod reduce + int8 compress.
+
+The hierarchical reduction (``core/hierarchical.py``) splits a mean over n
+clients into a fast intra-pod leg (n -> P pod partials) and a slow cross-pod
+leg (P -> 1). The DCN-bound payload is the int8-quantized partial; producing
+it with separate reduce / quantize / dequantize ops costs three passes over
+the partials plus a full f32 materialization of the roundtrip. These kernels
+produce it in a single pass over the deltas:
+
+* :func:`reduce_compress` — partial mean over the leading group axis AND the
+  int8 wire payload (values + per-row-block scales) in one kernel: each grid
+  step loads one ``(G, rb, C)`` block, accumulates the mean over ``G`` in
+  VMEM, and quantizes the resulting ``(rb, C)`` rows without ever writing the
+  f32 partial to HBM.
+* :func:`reduce_compress_roundtrip` — same pass, but emits the straight-
+  through f32 roundtrip value ``dequant(quant(mean(x)))`` (what the DrJAX
+  reduction semantics see) alongside the payload.
+* :func:`dequant_accumulate` — the matching cross-pod leg: dequantizes the P
+  per-pod payloads and accumulates their mean in one pass, so the f32
+  partials are never materialized on the receiving side either.
+
+Scale granularity is per row block: rows map to the sublane dimension and a
+row is one lane-contiguous block of ``C`` values (the flat-packing utility in
+``repro.compression`` lays trees out as ``(..., R, 256)`` buffers, so a
+"row" is a 256-wide slice of the packed delta).
+
+Shape contract (canonical 3-D; ``repro.kernels.ops`` folds leading pod axes
+in via ``jax.vmap``):
+
+    reduce_compress:           (G, R, C) f32-like -> ((R, C) int8, (R, 1) f32)
+    reduce_compress_roundtrip: (G, R, C) -> ((R, C) x.dtype, (R, C) int8, (R, 1) f32)
+    dequant_accumulate:        ((P, R, C) int8, (P, R, 1) f32) -> (R, C) f32
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _partial_mean(x_ref):
+    """Mean over the group axis of one (G, rb, C) block, in f32."""
+    x = x_ref[...].astype(jnp.float32)  # (G, rb, C)
+    return jnp.sum(x, axis=0) * (1.0 / x.shape[0])  # (rb, C)
+
+
+def _quantize_rows(part):
+    """Per-row symmetric int8 quantization of a (rb, C) block."""
+    absmax = jnp.max(jnp.abs(part), axis=-1, keepdims=True)  # (rb, 1)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(part / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _reduce_compress_kernel(x_ref, q_ref, s_ref):
+    q, scale = _quantize_rows(_partial_mean(x_ref))
+    q_ref[...] = q
+    s_ref[...] = scale
+
+
+def _reduce_compress_roundtrip_kernel(x_ref, back_ref, q_ref, s_ref):
+    q, scale = _quantize_rows(_partial_mean(x_ref))
+    back_ref[...] = (q.astype(jnp.float32) * scale).astype(back_ref.dtype)
+    q_ref[...] = q
+    s_ref[...] = scale
+
+
+def _dequant_accumulate_kernel(q_ref, s_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)          # (P, rb, C)
+    back = q * s_ref[...]                       # (P, rb, C) dequant inline
+    out_ref[...] = jnp.sum(back, axis=0) * (1.0 / q.shape[0])
+
+
+def _pad_rows(x, row_block, axis):
+    pad = (-x.shape[axis]) % row_block
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x
+
+
+def reduce_compress(x, *, row_block: int = 256, interpret: bool = False):
+    """Fused partial mean + int8 quantize: (G, R, C) -> ((R, C) q, (R, 1) s)."""
+    g, r, c = x.shape
+    row_block = min(row_block, r)
+    x = _pad_rows(x, row_block, axis=1)
+    rp = x.shape[1]
+    nb = rp // row_block
+    q, s = pl.pallas_call(
+        _reduce_compress_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((g, row_block, c), lambda i: (0, i, 0))],
+        out_specs=[
+            pl.BlockSpec((row_block, c), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, c), jnp.int8),
+            jax.ShapeDtypeStruct((rp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q[:r], s[:r]
+
+
+def reduce_compress_roundtrip(x, *, row_block: int = 256,
+                              interpret: bool = False):
+    """Fused mean + quantize + dequantize: (G, R, C) -> (back, q, s).
+
+    ``back`` is the straight-through roundtrip partial in ``x.dtype`` — the
+    value the DrJAX reduction consumes; ``(q, s)`` is the wire payload.
+    """
+    g, r, c = x.shape
+    row_block = min(row_block, r)
+    x = _pad_rows(x, row_block, axis=1)
+    rp = x.shape[1]
+    nb = rp // row_block
+    back, q, s = pl.pallas_call(
+        _reduce_compress_roundtrip_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((g, row_block, c), lambda i: (0, i, 0))],
+        out_specs=[
+            pl.BlockSpec((row_block, c), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, c), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, c), x.dtype),
+            jax.ShapeDtypeStruct((rp, c), jnp.int8),
+            jax.ShapeDtypeStruct((rp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return back[:r], q[:r], s[:r]
+
+
+def dequant_accumulate(q, scales, *, row_block: int = 256,
+                       interpret: bool = False):
+    """Fused dequantize + mean over pods: ((P, R, C), (P, R, 1)) -> (R, C)."""
+    p, r, c = q.shape
+    row_block = min(row_block, r)
+    q = _pad_rows(q, row_block, axis=1)
+    scales = _pad_rows(scales, row_block, axis=1)
+    rp = q.shape[1]
+    nb = rp // row_block
+    out = pl.pallas_call(
+        _dequant_accumulate_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((p, row_block, c), lambda i: (0, i, 0)),
+            pl.BlockSpec((p, row_block, 1), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_block, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, c), jnp.float32),
+        interpret=interpret,
+    )(q, scales)
+    return out[:r]

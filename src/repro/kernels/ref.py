@@ -73,3 +73,27 @@ def quantize_ref(x, *, row_block=256):
 
 def dequantize_ref(q, scales, dtype=jnp.float32):
     return (q.astype(jnp.float32) * scales).astype(dtype)
+
+
+def reduce_compress_ref(x):
+    """Fused partial mean + int8 quantize, op-for-op the kernel's math.
+
+    (G, R, C) -> ((R, C) int8, (R, 1) f32 scales). The mean accumulates in
+    f32 over the leading group axis; scales are per row (one lane-contiguous
+    block of C values).
+    """
+    part = jnp.sum(x.astype(jnp.float32), axis=0) * (1.0 / x.shape[0])
+    return quantize_ref(part)
+
+
+def reduce_compress_roundtrip_ref(x):
+    """(G, R, C) -> (back x.dtype, q int8, s f32): mean + quant + dequant."""
+    q, s = reduce_compress_ref(x)
+    back = dequantize_ref(q, s, x.dtype)
+    return back, q, s
+
+
+def dequant_accumulate_ref(q, scales):
+    """Fused dequantize + mean over pods: ((P, R, C), (P, R, 1)) -> (R, C)."""
+    back = q.astype(jnp.float32) * scales
+    return jnp.sum(back, axis=0) * (1.0 / q.shape[0])

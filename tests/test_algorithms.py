@@ -210,6 +210,21 @@ class TestCompression:
         sp = topk_sparsify(x, fraction=0.4)
         np.testing.assert_allclose(sp["w"], [0, -5.0, 0, 3.0, 0])
 
+    def test_topk_tied_magnitudes_keep_exactly_k(self):
+        """Regression: a >=-threshold rule kept MORE than k entries when
+        magnitudes tie at the cutoff; selection must keep exactly k."""
+        x = {"w": jnp.array([1.0, -2.0, 2.0, -2.0, 3.0])}
+        sp = topk_sparsify(x, fraction=0.4)  # k = 2, cutoff |2| ties 3-ways
+        kept = np.flatnonzero(np.asarray(sp["w"]))
+        assert kept.size == 2
+        # the max survives; the tie is broken deterministically (index order)
+        np.testing.assert_allclose(sp["w"], [0, -2.0, 0, 0, 3.0])
+
+    def test_topk_all_tied(self):
+        x = jnp.ones((8,))
+        sp = topk_sparsify(x, fraction=0.5)
+        assert int((np.asarray(sp) != 0).sum()) == 4
+
     def test_error_feedback_reduces_bias(self):
         tree = {"w": jax.random.normal(jax.random.PRNGKey(2), (256,))}
         residual = ErrorFeedback.init(tree)
