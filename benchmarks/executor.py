@@ -1,0 +1,206 @@
+"""Compiled plan executor vs interpreted ``run_plan``: dispatch overhead.
+
+Measures the per-round wall clock of the local-SGD round plan executed
+
+* ``interpreted`` — ``run_plan``, the §5 reference executor (one eager
+  dispatch per eqn, control flow on the host);
+* ``compiled``   — ``plan.compile()``, the whole plan lowered to ONE jitted
+  executable (PR-5);
+* ``compiled_donated`` — same, with params/server_state donated (the hot
+  round-loop form);
+
+plus the multi-round trainer (a LOOP-stage plan: ``lax.scan`` inside the
+executable vs the interpreter's per-iteration Python loop).
+
+Two invariants are ASSERTED, not just reported:
+ * compiled output is bitwise-equal to ``run_plan`` (CPU correctness bar);
+ * N rounds after warmup trigger ZERO retraces (trace-counter check), and
+   re-compiling a structurally identical re-built plan is a cache hit.
+
+Results are merged into this commit's ``BENCH_hier.json`` trajectory entry
+under ``"executor"`` (shared with ``hier_reduce``'s wall-clock points).
+Invoked via ``benchmarks.run`` (key ``executor``).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core as drjax
+from repro import optim
+from repro.algorithms.rounds import (
+    LocalSGDConfig,
+    make_local_sgd_round,
+    make_multi_round,
+)
+from repro.launch import bench_log
+from repro.runtime import executor as executor_lib
+
+OUT_PATH = bench_log.bench_path()
+
+
+def _quadratic_round(n=8, steps=2, dim=16):
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    params = {
+        "w": jax.random.normal(jax.random.PRNGKey(0), (dim,)),
+        "b": jnp.float32(0.0),
+    }
+    data = {
+        "x": jax.random.normal(jax.random.PRNGKey(1), (n, steps, 8, dim)),
+        "y": jax.random.normal(jax.random.PRNGKey(2), (n, steps, 8)),
+    }
+    server = optim.fedavg_momentum(1.0)
+    cfg = LocalSGDConfig(partition_size=n, num_local_steps=steps)
+    round_fn = make_local_sgd_round(loss_fn, optim.sgd(0.05), server, cfg)
+    return round_fn, params, server.init(params), data
+
+
+def _time_per_call(fn, iters=50, reps=5):
+    fn()  # warmup (compile on the compiled path)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn()
+        jax.block_until_ready(jax.tree_util.tree_leaves(out))
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best
+
+
+def _assert_bitwise(a_list, b_list, what: str):
+    assert len(a_list) == len(b_list)
+    for a, b in zip(a_list, b_list):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            raise AssertionError(f"{what}: compiled != run_plan (bitwise)")
+
+
+def run():
+    round_fn, params, sstate, data = _quadratic_round()
+    flat = jax.tree_util.tree_leaves((params, sstate, data))
+
+    # --- single round plan -------------------------------------------------
+    plan = drjax.build_plan(
+        jax.make_jaxpr(round_fn)(params, sstate, data), 8
+    )
+    compiled = plan.compile()
+    _assert_bitwise(
+        list(compiled(*flat)), drjax.run_plan(plan, *flat), "round"
+    )
+
+    interp_s = _time_per_call(lambda: drjax.run_plan(plan, *flat))
+    comp_s = _time_per_call(lambda: compiled(*flat))
+
+    # Zero retraces across rounds: N more calls must not trace again.
+    traces_after_warmup = compiled.trace_count
+    for _ in range(20):
+        compiled(*flat)
+    retraces = compiled.trace_count - traces_after_warmup
+    assert retraces == 0, f"compiled round retraced {retraces}x across rounds"
+    assert traces_after_warmup == 1, "compiled round traced more than once"
+
+    # Executable cache: a re-built (structurally identical) plan is a HIT.
+    plan2 = drjax.build_plan(
+        jax.make_jaxpr(round_fn)(params, sstate, data), 8
+    )
+    compiled2 = plan2.compile()
+    compiled2(*flat)
+    assert compiled2.trace_count == 1, "re-planned program missed the cache"
+
+    # Donated hot-loop form (fresh buffers per call so donation is real).
+    donate_idx = tuple(
+        range(len(jax.tree_util.tree_leaves((params, sstate))))
+    )
+    compiled_d = plan.compile(donate_argnums=donate_idx)
+
+    def donated_round():
+        carried = [jnp.array(x) for x in flat[: len(donate_idx)]]
+        return compiled_d(*carried, *flat[len(donate_idx):])
+
+    donated_s = _time_per_call(donated_round)
+
+    # --- multi-round trainer (LOOP stage -> lax.scan in the executable) ----
+    num_rounds = 8
+    trainer = make_multi_round(round_fn, num_rounds)
+    all_data = jax.tree_util.tree_map(
+        lambda x: jnp.stack([x] * num_rounds), data
+    )
+    tflat = jax.tree_util.tree_leaves((params, sstate, all_data))
+    tplan = drjax.build_plan(
+        jax.make_jaxpr(jax.jit(trainer))(params, sstate, all_data), 8
+    )
+    tcompiled = tplan.compile()
+    _assert_bitwise(
+        list(tcompiled(*tflat)), drjax.run_plan(tplan, *tflat), "trainer"
+    )
+    interp_loop_s = _time_per_call(
+        lambda: drjax.run_plan(tplan, *tflat), iters=5, reps=3
+    )
+    comp_loop_s = _time_per_call(lambda: tcompiled(*tflat), iters=5, reps=3)
+    assert tcompiled.trace_count == 1
+
+    point = {
+        "round_interpreted_us": interp_s * 1e6,
+        "round_compiled_us": comp_s * 1e6,
+        "round_compiled_donated_us": donated_s * 1e6,
+        "round_speedup": interp_s / comp_s,
+        "trainer_rounds": num_rounds,
+        "trainer_interpreted_us": interp_loop_s * 1e6,
+        "trainer_compiled_us": comp_loop_s * 1e6,
+        "trainer_speedup": interp_loop_s / comp_loop_s,
+        "retraces_after_warmup": retraces,
+        "stage_units_fused": tcompiled.num_stage_units,
+        "stage_units_interpreted": len(tplan.stages),
+    }
+    bench_log.merge_entry({"executor": point})
+
+    if comp_s > interp_s:
+        raise AssertionError(
+            f"compiled per-round dispatch ({comp_s*1e6:.1f}us) slower than "
+            f"interpreted run_plan ({interp_s*1e6:.1f}us)"
+        )
+
+    return [
+        {
+            "name": "executor_round_interpreted",
+            "us_per_call": f"{interp_s*1e6:.1f}",
+            "derived": "run_plan (eager reference)",
+        },
+        {
+            "name": "executor_round_compiled",
+            "us_per_call": f"{comp_s*1e6:.1f}",
+            "derived": (
+                f"speedup={interp_s/comp_s:.1f}x; retraces={retraces}"
+            ),
+        },
+        {
+            "name": "executor_round_compiled_donated",
+            "us_per_call": f"{donated_s*1e6:.1f}",
+            "derived": "donate params+server_state",
+        },
+        {
+            "name": f"executor_trainer{num_rounds}_interpreted",
+            "us_per_call": f"{interp_loop_s*1e6:.1f}",
+            "derived": "LOOP stage via python loop",
+        },
+        {
+            "name": f"executor_trainer{num_rounds}_compiled",
+            "us_per_call": f"{comp_loop_s*1e6:.1f}",
+            "derived": (
+                f"speedup={interp_loop_s/comp_loop_s:.1f}x; "
+                f"lax.scan in-executable"
+            ),
+        },
+    ]
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}")
+    print(f"merged executor point into {OUT_PATH}")

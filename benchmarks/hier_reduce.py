@@ -24,9 +24,6 @@ for quick reading. Invoked via ``benchmarks.run`` (key ``hier``).
 
 from __future__ import annotations
 
-import json
-import os
-import subprocess
 import time
 
 import jax
@@ -34,9 +31,9 @@ import jax.numpy as jnp
 
 from repro import core as drjax
 from repro.compression import int8_roundtrip
+from repro.launch import bench_log
 
-_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-OUT_PATH = os.path.join(_REPO, "BENCH_hier.json")
+OUT_PATH = bench_log.bench_path()
 
 
 def _time_interleaved(fns, args, iters: int = 30, reps: int = 5):
@@ -55,16 +52,6 @@ def _time_interleaved(fns, args, iters: int = 30, reps: int = 5):
             jax.block_until_ready(out)
             best[k] = min(best[k], (time.perf_counter() - t0) / iters)
     return best
-
-
-def _git_sha() -> str:
-    try:
-        return subprocess.run(
-            ["git", "rev-parse", "--short", "HEAD"], cwd=_REPO,
-            capture_output=True, text=True, check=True,
-        ).stdout.strip()
-    except Exception:  # noqa: BLE001 - not a git checkout / git missing
-        return "unknown"
 
 
 def _bench_point(n: int, num_pods: int, d: int) -> dict:
@@ -132,31 +119,14 @@ def _bench_point(n: int, num_pods: int, d: int) -> dict:
     }
 
 
-def _load_trajectory() -> list:
-    if not os.path.exists(OUT_PATH):
-        return []
-    try:
-        with open(OUT_PATH) as f:
-            data = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        return []
-    if "trajectory" in data:
-        return list(data["trajectory"])
-    if "points" in data:  # pre-trajectory schema: keep it as the seed entry
-        return [{"sha": "seed(pre-trajectory)", "points": data["points"]}]
-    return []
-
-
 def run():
     points = [
         _bench_point(64, 4, 1 << 14),
         _bench_point(256, 8, 1 << 12),
     ]
-    sha = _git_sha()
-    trajectory = [e for e in _load_trajectory() if e.get("sha") != sha]
-    trajectory.append({"sha": sha, "points": points})
-    with open(OUT_PATH, "w") as f:
-        json.dump({"points": points, "trajectory": trajectory}, f, indent=2)
+    # One merge rule for all BENCH_hier writers (executor bench, --hier-sweep
+    # sharded point): replace only OUR keys of this commit's entry.
+    bench_log.merge_entry({"points": points}, top_points=points)
     rows = []
     for pt in points:
         key = f"hier_reduce_n{pt['n']}_P{pt['num_pods']}"

@@ -22,6 +22,8 @@ BENCHES = (
     ("table1", "benchmarks.table1_flops"),
     ("micro", "benchmarks.primitives_micro"),
     ("hier", "benchmarks.hier_reduce"),  # also writes BENCH_hier.json
+    ("hier_sharded", "benchmarks.hier_sharded"),  # pod-mesh subprocess sweep
+    ("executor", "benchmarks.executor"),  # compiled vs interpreted plans
     ("fig4", "benchmarks.fig4_weak_scaling"),
     ("fig5", "benchmarks.fig5_forloop"),
     ("fig6", "benchmarks.fig6_sharding_ablation"),

@@ -125,6 +125,28 @@ hier_outs = drjax.run_plan(hier_plan, *hier_args)
 print("\nhierarchical plan executor:", hier_outs[0],
       "== direct:", pod_hierarchical_round(*hier_args))
 
+# --- compiled plan executor: the whole plan as ONE executable ---------------
+
+# run_plan dispatches each stage eagerly from Python (the reference
+# semantics). plan.compile() lowers the ENTIRE plan — loop stages become
+# lax.scan/while_loop, adjacent local stages fuse — into one donation-aware
+# jitted executable, cached by (plan fingerprint, mesh, arg shapes): calling
+# it across rounds triggers exactly one trace, and re-building the same plan
+# re-uses the cached executable.
+
+compiled_hier = hier_plan.compile()
+print("\ncompiled hierarchical round:", compiled_hier(*hier_args)[0],
+      "== run_plan:", hier_outs[0], "(bitwise on CPU)")
+compiled_hier(*hier_args)
+print("traces after 2 calls:", compiled_hier.trace_count,
+      "(one executable, zero retraces across rounds)")
+
+compiled_loop = loop_plan.compile()  # the LOOP-stage trainer from above
+print("compiled multi-round trainer:", compiled_loop(*loop_args)[0],
+      "== run_plan:", loop_outs[0],
+      f"({compiled_loop.num_stage_units} fused stage units,"
+      f" scan carry donated in-executable)")
+
 # --- compressed hierarchical reduce: the fused fast path ---------------------
 
 # The per-pod partials are the bytes that cross the slow DCN leg; quantizing

@@ -25,10 +25,44 @@ if [ -n "$violations" ]; then
   exit 1
 fi
 
+# Donation lint (ROADMAP "Compiled plan executor"): every jax.jit in the
+# hot layers either donates its carried state or carries an explicit
+# "# no-donate: <reason>" marker.
+python scripts/check_donation.py
+
 # Examples smoke-run: the quickstart exercises the full authoring surface
 # (flat + nested placements, plan IR, Beam emitter, fused compressed
-# hierarchical reduce) end to end.
+# hierarchical reduce, compiled plan executor) end to end.
 python examples/quickstart.py > /dev/null
+
+# Compiled-vs-interpreted smoke check: plan.compile() must be BITWISE equal
+# to the run_plan oracle for a loop-carrying round program (full coverage in
+# tests/test_executor.py).
+python - <<'PY'
+import jax, jax.numpy as jnp, numpy as np
+from repro import core as drjax
+
+@drjax.program(partition_size=3)
+def two_rounds(m, ys):
+    def body(m, _):
+        g = drjax.reduce_mean(
+            drjax.map_fn(lambda a, b: a - b, (drjax.broadcast(m), ys)))
+        return m - 0.5 * g, g
+    m, gs = jax.lax.scan(body, m, None, length=2)
+    return m, gs
+
+args = (jnp.float32(0.3), jnp.array([1.0, 2.0, 3.0]))
+plan = drjax.build_plan(jax.make_jaxpr(two_rounds)(*args), 3)
+compiled = plan.compile()
+ref = drjax.run_plan(plan, *args)
+out = compiled(*args)
+assert all(np.array_equal(np.asarray(a), np.asarray(b))
+           for a, b in zip(out, ref)), \
+    "compiled plan executor diverged from run_plan (bitwise)"
+compiled(*args)
+assert compiled.trace_count == 1, "compiled plan retraced on a repeat call"
+print("compiled-vs-interpreted smoke check: OK")
+PY
 
 # Fused reduce+compress smoke check: the interpret-mode Pallas kernel must be
 # BITWISE equal to its jnp oracle (fast; full coverage in test_fused_reduce).

@@ -36,6 +36,8 @@ def make_async_local_sgd_round(
     client_opt: Optimizer,
     server_opt: Optimizer,
     cfg: LocalSGDConfig,
+    *,
+    donate: bool = False,
 ):
     def client_update(params0, client_data):
         opt_state = client_opt.init(params0)
@@ -80,6 +82,10 @@ def make_async_local_sgd_round(
         # the first server update isn't fed a dtype-mismatched aggregate.
         return jax.tree_util.tree_map(jnp.zeros_like, params)
 
+    if donate:
+        # The async carry is (params, pending_delta, server_state): all
+        # three are round-to-round state, so the hot loop donates all three.
+        async_round = jax.jit(async_round, donate_argnums=(0, 1, 2))
     return async_round, init_pending
 
 
@@ -88,6 +94,8 @@ def make_hierarchical_async_round(
     client_opt: Optimizer,
     server_opt: Optimizer,
     cfg: LocalSGDConfig,
+    *,
+    donate: bool = False,
 ):
     """Pod-hierarchical asynchronous round (nested {pods, clients} stack).
 
@@ -126,4 +134,6 @@ def make_hierarchical_async_round(
     def init_pending(params):
         return jax.tree_util.tree_map(jnp.zeros_like, params)
 
+    if donate:
+        async_round = jax.jit(async_round, donate_argnums=(0, 1, 2))
     return async_round, init_pending

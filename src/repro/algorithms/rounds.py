@@ -109,16 +109,30 @@ def _make_client_update(loss_fn: Callable, client_opt: Optimizer,
     return client_update
 
 
+def _maybe_donate(round_fn: Callable, donate: bool) -> Callable:
+    """Donation rule for round functions (see ROADMAP "Compiled plan
+    executor"): the carried state — params (arg 0) and server state (arg 1)
+    — is donated so the hot round loop updates it in place instead of
+    copying every round. Opt-in because a donated caller must rebind its
+    inputs (the reference/bitwise tests reuse theirs)."""
+    if not donate:
+        return round_fn
+    return jax.jit(round_fn, donate_argnums=(0, 1))
+
+
 def make_local_sgd_round(
     loss_fn: Callable,
     client_opt: Optimizer,
     server_opt: Optimizer,
     cfg: LocalSGDConfig,
+    *,
+    donate: bool = False,
 ):
     """Returns round_fn(global_params, server_state, round_data[, mask]).
 
     ``round_data`` leaves have shape (n, num_local_steps, ...per-step batch).
-    Returns (new_params, new_server_state, metrics).
+    Returns (new_params, new_server_state, metrics). ``donate=True`` returns
+    the round jitted with params/server_state donated (the hot-loop form).
     """
     client_update = _make_client_update(loss_fn, client_opt, cfg)
 
@@ -144,7 +158,7 @@ def make_local_sgd_round(
         metrics = {"loss": mean_loss}
         return new_params, new_server_state, metrics
 
-    return round_fn
+    return _maybe_donate(round_fn, donate)
 
 
 def make_hierarchical_local_sgd_round(
@@ -152,6 +166,8 @@ def make_hierarchical_local_sgd_round(
     client_opt: Optimizer,
     server_opt: Optimizer,
     cfg: LocalSGDConfig,
+    *,
+    donate: bool = False,
 ):
     """Pod-hierarchical local SGD: the nested-placement round (paper §6).
 
@@ -214,10 +230,16 @@ def make_hierarchical_local_sgd_round(
         metrics = {"loss": mean_loss}
         return new_params, new_server_state, metrics
 
-    return round_fn
+    return _maybe_donate(round_fn, donate)
 
 
-def make_multi_round(round_fn: Callable, num_rounds: int) -> Callable:
+def make_multi_round(
+    round_fn: Callable,
+    num_rounds: int,
+    *,
+    jit: bool = False,
+    donate: bool = True,
+) -> Callable:
     """Stack ``num_rounds`` rounds of ``round_fn`` into one ``lax.scan``.
 
     ``round_fn`` is any ``(params, server_state, round_data) -> (params,
@@ -227,6 +249,13 @@ def make_multi_round(round_fn: Callable, num_rounds: int) -> Callable:
     the trainer as a single ``LoopStage`` whose sub-plan makes the per-round
     communication explicit (one broadcast + one reduce per round) — the plan
     a federated/Beam backend would actually schedule.
+
+    ``jit=True`` returns the trainer compiled, with the scan carry (params +
+    server state) donated into the executable by default (``donate=False``
+    to keep the caller's buffers alive): inside the scan XLA already updates
+    the carry in place; donation extends that in-place discipline across the
+    jit boundary, so N rounds trigger exactly one trace and zero carry
+    copies (asserted in ``tests/test_executor.py``).
     """
 
     def trainer(params, server_state, all_data):
@@ -242,6 +271,8 @@ def make_multi_round(round_fn: Callable, num_rounds: int) -> Callable:
         )
         return params, server_state, metrics
 
+    if jit:
+        return jax.jit(trainer, donate_argnums=(0, 1) if donate else ())
     return trainer
 
 

@@ -395,6 +395,36 @@ class MapReducePlan:
             fns[name] = _make_stage_fn(stage, ins, outs, consts)
         return fns
 
+    # -- compiled execution --------------------------------------------------
+
+    def compile(
+        self,
+        *,
+        mesh=None,
+        placement_axes=None,
+        donate_argnums: Sequence[int] = (),
+        loops: str = "native",
+    ):
+        """Lower the whole plan into ONE donation-aware jitted executable.
+
+        Returns a :class:`repro.runtime.executor.CompiledPlan`: loop stages
+        become ``lax.scan``/``lax.while_loop``, cond stages ``lax.switch``,
+        adjacent local stages fuse, and executables are cached by
+        ``(plan fingerprint, mesh shape, arg shapes/dtypes)``. Bitwise-equal
+        to :func:`run_plan` on CPU (the correctness oracle); ``run_plan``
+        stays the eager fallback. See the executor module for the donation
+        rule and the elastic per-placement-level cache split.
+        """
+        from repro.runtime import executor as _executor  # lazy: no core->runtime cycle
+
+        return _executor.compile_plan(
+            self,
+            mesh=mesh,
+            placement_axes=placement_axes,
+            donate_argnums=donate_argnums,
+            loops=loops,
+        )
+
     # -- emitters ----------------------------------------------------------
 
     def to_text(self) -> str:
@@ -503,18 +533,25 @@ def _stage_writes(stage: Stage) -> List[Any]:
 
 
 def _make_stage_fn(stage, ins, outs, consts):
+    # Consts are hoisted into the closure ONCE (beam_consts-style): per call
+    # we only bind the stage inputs, instead of re-binding every captured
+    # constant into a fresh env — on the compiled path this also means the
+    # constants are staged into the executable once, not re-staged per round.
+    const_env = dict(consts)
+
     def fn(*vals):
         if len(vals) != len(ins):
             raise TypeError(
                 f"stage fn expects {len(ins)} inputs, got {len(vals)}"
             )
-        env = dict(consts)
-        env.update(zip(ins, vals))
+        env = dict(zip(ins, vals))
 
         def read(a):
             if _is_literal(a):
                 return a.val
-            return env[a]
+            if a in env:
+                return env[a]
+            return const_env[a]
 
         for eqn in stage.eqns:
             results = _eval_eqn(eqn, read)

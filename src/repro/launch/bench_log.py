@@ -1,0 +1,75 @@
+"""BENCH_hier.json trajectory writer (one owner for the merge rule).
+
+The trajectory keeps one entry per git SHA; several writers contribute keys
+to the SAME entry — ``benchmarks/hier_reduce.py`` ("points"),
+``benchmarks/executor.py`` ("executor"), the dry-run driver's
+``--hier-sweep`` ("sharded") — so the merge must update in place and never
+clobber another writer's measurements. Import-safe: no JAX, no env
+mutation.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+from typing import Optional
+
+
+def repo_root() -> str:
+    return os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+    )
+
+
+def bench_path() -> str:
+    return os.path.join(repo_root(), "BENCH_hier.json")
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=repo_root(),
+            capture_output=True, text=True, check=True,
+        ).stdout.strip()
+    except Exception:  # noqa: BLE001 - not a git checkout / git missing
+        return "unknown"
+
+
+def _load(path: str) -> dict:
+    if not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def merge_entry(updates: dict, *, top_points: Optional[list] = None) -> str:
+    """Merge ``updates`` into the current SHA's trajectory entry.
+
+    Only the caller's keys are replaced; everything else in the entry (and
+    every other SHA's entry) survives. ``top_points`` additionally mirrors
+    the latest wall-clock points under the top-level ``"points"`` key for
+    quick reading (hier_reduce's historical schema). A pre-trajectory file
+    (bare ``{"points": ...}``) is kept as the seed entry.
+    """
+    path = bench_path()
+    data = _load(path)
+    trajectory = list(data.get("trajectory", []))
+    if not trajectory and "points" in data:
+        trajectory = [{"sha": "seed(pre-trajectory)", "points": data["points"]}]
+    sha = git_sha()
+    entry = next((e for e in trajectory if e.get("sha") == sha), None)
+    if entry is None:
+        entry = {"sha": sha}
+        trajectory.append(entry)
+    entry.update(updates)
+    out = {"points": data.get("points", []), "trajectory": trajectory}
+    if top_points is not None:
+        out["points"] = top_points
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    return path

@@ -1,10 +1,17 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    # Append rather than overwrite: unrelated user flags survive, while a
+    # caller that already forces a device count (the --hier-sweep bench
+    # runs under 8 fake devices) keeps its smaller pool.
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512"
+    ).strip()
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
-The two lines above MUST precede any other import (JAX locks the device
-count at first init). 512 host devices back the production meshes:
+The lines above MUST precede any other import (JAX locks the device count
+at first init). 512 host devices back the production meshes:
 
     single-pod:  (16, 16)      -> ("data", "model")      256 chips
     multi-pod:   (2, 16, 16)   -> ("pod", "data", "model") 512 chips
@@ -100,6 +107,7 @@ def _lower_cell(arch: str, cell: str, multi_pod: bool, algorithm: str):
     elif kind == "prefill":
         step, shardings_for = steps_lib.make_prefill_step(cfg, mesh)
         specs = steps_lib.prefill_input_specs(cfg, gb, seq)
+        # no-donate: prefill creates the caches; params serve every request
         jitted = jax.jit(step, in_shardings=shardings_for(specs))
         lowered = jitted.lower(*specs)
     else:  # decode
@@ -206,6 +214,92 @@ def run_cell(arch: str, cell: str, mesh_kind: str = "single",
     return result
 
 
+def run_hier_sweep(num_pods: int = 2, iters: int = 20, reps: int = 3) -> dict:
+    """Pod-mesh sweep: flat vs hierarchical vs fused reduce, SHARDED.
+
+    ``benchmarks/hier_reduce.py`` measures single-host wall clock; this
+    sweep runs the same three aggregations on a real (pod, data) mesh — the
+    fake-device pool this driver forces — with the inputs device_put onto
+    their placement shardings, so the BENCH_hier trajectory also tracks a
+    sharded measurement (ROADMAP "Multi-device BENCH_hier point"). Run it
+    under a small pool (the benchmarks runner forces 8 devices); under the
+    default 512-device pool it uses the first 8.
+    """
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import core as drjax
+    from repro.compression import int8_roundtrip
+
+    devices = jax.devices()[: min(8, len(jax.devices()))]
+    data_par = len(devices) // num_pods
+    mesh = compat.make_mesh(
+        (num_pods, data_par), ("pod", "data"),
+        devices=devices[: num_pods * data_par],
+    )
+    clients_per_pod = data_par * 4  # several groups per device (weak scaling)
+    n = num_pods * clients_per_pod
+    d = 1 << 12
+    paxes = {"pods": "pod", "clients": "data"}
+
+    @drjax.program(partition_size=n, partition_axes=("pod", "data"), mesh=mesh)
+    def flat(xs):
+        return drjax.reduce_mean(xs)
+
+    @drjax.program(placements={"pods": num_pods, "clients": clients_per_pod},
+                   partition_axes=paxes, mesh=mesh)
+    def hier(xs):
+        return drjax.reduce_mean(xs)  # two placement-tagged stages
+
+    @drjax.program(placements={"pods": num_pods, "clients": clients_per_pod},
+                   partition_axes=paxes, mesh=mesh)
+    def fused(xs):
+        return drjax.hierarchical_reduce_mean(
+            xs, compress_fn=int8_roundtrip
+        )
+
+    key = jax.random.PRNGKey(0)
+    xs_flat = jax.device_put(
+        jax.random.normal(key, (n, d), jnp.float32),
+        compat.named_sharding(mesh, P(("pod", "data"), None)),
+    )
+    xs_nested = jax.device_put(
+        jax.random.normal(key, (num_pods, clients_per_pod, d), jnp.float32),
+        compat.named_sharding(mesh, P("pod", "data", None)),
+    )
+    fns = [(jax.jit(flat), xs_flat),  # no-donate: bench re-reads its inputs
+           (jax.jit(hier), xs_nested),  # no-donate: bench re-reads its inputs
+           (jax.jit(fused), xs_nested)]  # no-donate: bench re-reads its inputs
+    for fn, xs in fns:
+        jax.block_until_ready(fn(xs))  # warmup/compile
+    best = [float("inf")] * len(fns)
+    for _ in range(reps):  # round-robin so host noise hits all variants
+        for k, (fn, xs) in enumerate(fns):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn(xs)
+            jax.block_until_ready(out)
+            best[k] = min(best[k], (time.perf_counter() - t0) / iters)
+    from repro.launch import bench_log
+
+    flat_us, hier_us, fused_us = (t * 1e6 for t in best)
+    point = {
+        "devices": len(devices),
+        "mesh": {"pod": num_pods, "data": data_par},
+        "n": n,
+        "num_pods": num_pods,
+        "payload_floats": d,
+        "flat_us_per_call": flat_us,
+        "hier_us_per_call": hier_us,
+        "fused_us_per_call": fused_us,
+        "fused_vs_flat": fused_us / flat_us,
+        "hier_vs_flat": hier_us / flat_us,
+    }
+    path = bench_log.merge_entry({"sharded": [point]})
+    print(json.dumps({"hier_sweep": point, "wrote": path}))
+    return point
+
+
 def result_path(arch: str, cell: str, mesh_kind: str, algorithm: str) -> str:
     tag = f"{arch}__{cell}__{mesh_kind}"
     if algorithm != "sgd":
@@ -223,8 +317,15 @@ def main():
                     help="run every missing assigned-arch cell")
     ap.add_argument("--paper", action="store_true",
                     help="dry-run the paper's local-SGD rounds (lm_350m/1b/8b)")
+    ap.add_argument("--hier-sweep", action="store_true",
+                    help="sharded flat/hier/fused reduce sweep on a "
+                         "(pod, data) mesh; appends to BENCH_hier.json")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
+
+    if args.hier_sweep:
+        run_hier_sweep()
+        return
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
 

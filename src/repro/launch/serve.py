@@ -22,7 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import registry, transformer
+from repro.launch import steps as steps_lib
+from repro.models import registry
+from repro.runtime.executor import TraceCounter
 
 
 @dataclass
@@ -38,25 +40,41 @@ class BatchScheduler:
     """Static-batch scheduler: admits up to ``batch`` requests per wave,
     prefills them together (right-padded), then decodes in lockstep with an
     active-mask; finished slots are masked out (fixed-shape steps — no
-    recompilation as requests finish)."""
+    recompilation as requests finish).
+
+    Both legs run compiled: prefill goes through the same
+    :func:`repro.launch.steps.make_prefill_step` builder the dry-run meshes
+    lower (jitted, KV caches sized to ``max_len``; one trace per distinct
+    prompt length — ``prefill_traces`` exposes the count), and the decode
+    step donates the KV caches so the decode loop updates them in place
+    instead of copying ``batch * max_len`` of cache every token.
+    """
 
     def __init__(self, cfg, params, batch: int, max_len: int):
         self.cfg, self.params = cfg, params
         self.batch, self.max_len = batch, max_len
-        self._decode = jax.jit(
-            lambda p, tok, caches: transformer.decode_step(cfg, p, tok, caches)
+        prefill_step, _ = steps_lib.make_prefill_step(
+            cfg, mesh=None, max_len=max_len
         )
+        self._prefill_counter = TraceCounter()
+        # no-donate: params serve every wave; prefill CREATES the caches.
+        self._prefill = jax.jit(self._prefill_counter.wrap(prefill_step))
+        decode_step, _ = steps_lib.make_decode_step(cfg, mesh=None)
+        self._decode = jax.jit(decode_step, donate_argnums=(2,))
+
+    @property
+    def prefill_traces(self) -> int:
+        return self._prefill_counter.count
 
     def run_wave(self, requests: List[Request]) -> Dict[int, List[int]]:
         assert len(requests) <= self.batch
-        cfg = self.cfg
         lens = [len(r.prompt) for r in requests]
         s = max(lens)
         toks = np.zeros((len(requests), s), np.int32)
         for i, r in enumerate(requests):
             toks[i, : lens[i]] = r.prompt  # left-aligned
-        last_logits, caches = transformer.prefill(
-            cfg, self.params, jnp.asarray(toks), max_len=self.max_len
+        last_logits, caches = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)}
         )
         token = jnp.argmax(last_logits, -1)[:, None].astype(jnp.int32)
         active = np.ones((len(requests),), bool)

@@ -187,6 +187,7 @@ def make_drjax_round_step(
     use_sharding_annotations: bool = True,
     compression: Optional[str] = None,
     fsdp: bool = False,
+    jit_donated: bool = False,
 ):
     loss_fn = functools.partial(registry.loss_fn, cfg)
     server_opt = {
@@ -217,6 +218,11 @@ def make_drjax_round_step(
     def round_step(params, server_state, round_data):
         with axis_rules(mesh, rules):
             return inner(params, server_state, round_data)
+
+    if jit_donated:
+        # The round-loop donation discipline (same as dryrun's jit of this
+        # step): params + server_state are carried state and update in place.
+        round_step = jax.jit(round_step, donate_argnums=(0, 1))
 
     p_axes = registry.param_axes(cfg)
     param_sh = _shardings(p_axes, mesh, rules)
@@ -264,7 +270,8 @@ def drjax_round_specs(cfg, *, partition_size: int, num_local_steps: int,
 
 
 def make_prefill_step(cfg, mesh, *, fsdp: Optional[bool] = None,
-                      tp_comm: Optional[str] = None):
+                      tp_comm: Optional[str] = None,
+                      max_len: Optional[int] = None):
     if tp_comm:
         import dataclasses
         cfg = dataclasses.replace(cfg, tp_comm=tp_comm)
@@ -272,7 +279,9 @@ def make_prefill_step(cfg, mesh, *, fsdp: Optional[bool] = None,
     # serving always uses TP rules: memory (weights + KV) binds at decode,
     # so caches shard over the model axis regardless of the train strategy.
     rules = fsdp_rules(fsdp)
-    inner = registry.make_prefill_fn(cfg)
+    # max_len sizes the prefill-built KV caches for the decode loop that
+    # consumes them (the serve scheduler passes prompt_len + max_new).
+    inner = registry.make_prefill_fn(cfg, max_len=max_len)
 
     def prefill_step(params, batch):
         with axis_rules(mesh, rules):

@@ -56,7 +56,9 @@ def build_round_fn(cfg, args):
         straggler_mask=args.stragglers,
     )
     round_fn = make_local_sgd_round(loss_fn, client_opt, server_opt, round_cfg)
-    return jax.jit(round_fn), server_opt
+    # Donate the carried state (params, server_state): the round loop below
+    # rebinds both every round, so the executable updates them in place.
+    return jax.jit(round_fn, donate_argnums=(0, 1)), server_opt
 
 
 def main():

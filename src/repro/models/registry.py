@@ -146,14 +146,17 @@ def make_concrete_batch(cfg: ModelConfig, batch: int, seq: int, rng=None):
 # ---------------------------------------------------------------------------
 
 
-def make_prefill_fn(cfg: ModelConfig):
+def make_prefill_fn(cfg: ModelConfig, *, max_len: Optional[int] = None):
+    """``max_len`` sizes the returned KV caches for subsequent decode steps
+    (default: the prompt length, the lower-only historical behavior)."""
     mod = family_module(cfg)
+    kw = {} if max_len is None else {"max_len": max_len}
 
     if cfg.is_encoder_decoder:
 
         def prefill_fn(params, batch):
             logits, caches, memkv = mod.prefill(
-                cfg, params, batch["frames"], batch["tokens"]
+                cfg, params, batch["frames"], batch["tokens"], **kw
             )
             return logits, caches
 
@@ -163,13 +166,13 @@ def make_prefill_fn(cfg: ModelConfig):
 
         def prefill_fn(params, batch):
             return mod.prefill(
-                cfg, params, batch["tokens"], embeds=batch["embeds"]
+                cfg, params, batch["tokens"], embeds=batch["embeds"], **kw
             )
 
         return prefill_fn
 
     def prefill_fn(params, batch):
-        return mod.prefill(cfg, params, batch["tokens"])
+        return mod.prefill(cfg, params, batch["tokens"], **kw)
 
     return prefill_fn
 

@@ -1,14 +1,35 @@
-"""Distributed runtime: fault tolerance, stragglers, elastic scaling."""
+"""Distributed runtime: compiled execution, fault tolerance, elasticity."""
 
+from .executor import (
+    CompiledPlan,
+    ElasticHierarchicalRound,
+    TraceCounter,
+    clear_executor_cache,
+    compile_plan,
+    fuse_stages,
+    plan_fingerprint,
+)
 from .failure import FailureInjector, run_with_recovery
 from .stragglers import StragglerSimulator, straggler_mask
-from .elastic import ElasticSchedule, rescale_partition
+from .elastic import (
+    ElasticSchedule,
+    make_elastic_hierarchical_round,
+    rescale_partition,
+)
 
 __all__ = [
+    "CompiledPlan",
+    "ElasticHierarchicalRound",
+    "TraceCounter",
+    "clear_executor_cache",
+    "compile_plan",
+    "fuse_stages",
+    "plan_fingerprint",
     "FailureInjector",
     "run_with_recovery",
     "StragglerSimulator",
     "straggler_mask",
     "ElasticSchedule",
+    "make_elastic_hierarchical_round",
     "rescale_partition",
 ]

@@ -22,6 +22,7 @@ import dataclasses
 from typing import Callable, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -56,6 +57,72 @@ def rescale_partition(
         return np.concatenate([x] * reps, axis=0)[:new_n]
 
     return jax.tree_util.tree_map(leaf, round_data)
+
+
+def make_elastic_hierarchical_round(
+    loss_fn: Callable,
+    client_opt,
+    server_opt,
+    cfg,
+    *,
+    loops: str = "native",
+    donate_cross: bool = False,
+):
+    """Pod-hierarchical local SGD that survives pod dropout WITHOUT
+    recompiling the per-client leg.
+
+    Numerically equivalent to
+    :func:`repro.algorithms.rounds.make_hierarchical_local_sgd_round`
+    (uncompressed path), but compiled per placement level through the
+    executor's split cache (:class:`repro.runtime.executor.
+    ElasticHierarchicalRound`): the per-client leg is one compiled per-pod
+    plan — ``cfg.partition_size`` clients, shapes independent of the pod
+    count — dispatched once per pod; the cross-pod leg (mean of pod partials
+    + server update) is a small executable keyed by the pod count. The
+    returned object's ``step(params, server_state, round_data)`` accepts
+    ``round_data`` leaves of shape ``(num_pods, clients_per_pod, ...)`` for
+    ANY ``num_pods``, so a shrunken cohort after a pod loss re-uses the
+    cached client executable and recompiles only the cross-pod leg.
+    """
+    from repro import core as drjax
+    from repro.algorithms.rounds import _make_client_update
+    from repro.optim.optimizers import apply_updates
+    from repro.runtime.executor import ElasticHierarchicalRound
+
+    client_update = _make_client_update(loss_fn, client_opt, cfg)
+
+    @drjax.program(
+        partition_size=cfg.partition_size,
+        partition_axes=cfg.partition_axes,
+        mesh=cfg.mesh,
+        use_sharding_annotations=cfg.use_sharding_annotations,
+    )
+    def client_leg(global_params, pod_data):
+        # The per-pod program: intra-pod leg of the hierarchical round.
+        params_b = drjax.broadcast(global_params)
+        deltas, losses = drjax.map_fn(client_update, (params_b, pod_data))
+        return drjax.reduce_mean(deltas), drjax.reduce_mean(losses)
+
+    def cross_leg(global_params, server_state, partials):
+        # Cross-pod leg: mean of the pod partials (the bytes that cross the
+        # DCN) + the server optimizer step.
+        pod_deltas, pod_losses = partials
+        mean_delta = jax.tree_util.tree_map(
+            lambda d: jnp.mean(d, axis=0), pod_deltas
+        )
+        updates, new_server_state = server_opt.update(
+            mean_delta, server_state, global_params
+        )
+        new_params = apply_updates(global_params, updates)
+        return new_params, new_server_state, {"loss": jnp.mean(pod_losses, 0)}
+
+    return ElasticHierarchicalRound(
+        client_leg,
+        cross_leg,
+        clients_per_pod=cfg.partition_size,
+        loops=loops,
+        donate_cross=donate_cross,
+    )
 
 
 def available_mesh_shapes(num_devices: int,
