@@ -193,3 +193,27 @@ fused_plan = drjax.build_plan(
 )
 print("\nfused plan (still REDUCE@clients -> REDUCE@pods):\n"
       + fused_plan.to_text())
+
+# --- static analysis: verify the plan WITHOUT running it --------------------
+
+# plan.analyze() runs every static pass: placement safety (the full-depth
+# generalization of check_locality — comm-free local stages even inside
+# cond branches and while predicates, broadcast/reduce pairing), donation/
+# aliasing (use-after-donate, why a donation would be dropped), retrace
+# hazards (a scalar folded into the captured consts defeats the executable
+# cache), and a per-stage communication-cost model read off the IR.
+
+report = hier_plan.analyze(donate_argnums=(0,))
+report.raise_if_errors()  # the oracle-suite gate: no errors, statically
+print("\nstatic analysis of the hierarchical round:", report)
+
+# The comm-cost pass splits the wire bytes by fabric: the clients-level
+# shuffle rides fast intra-pod ICI, only the pods-level leg crosses the
+# slow DCN — and a compress-tagged reduce is costed in its actual packed
+# int8+per-256-block-scales wire format, not naive f32/4.
+cost = fused_plan.comm_cost()
+print("fused plan comm cost: dcn_bytes=%.0f ici_bytes=%.0f" % (
+    cost.dcn_bytes, cost.ici_bytes))
+for c in cost.per_stage:
+    print(f"  {c.stage}: {c.op}@{c.placement} over {c.link}, "
+          f"{c.wire_format}, {c.wire_bytes:.0f} B")

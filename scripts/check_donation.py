@@ -1,79 +1,34 @@
 #!/usr/bin/env python
 """Donation lint: every ``jax.jit`` in the hot layers must donate or opt out.
 
-The donation rule (ROADMAP "Compiled plan executor"): a jitted hot loop
-donates its carried state — params, server/optimizer state, KV caches —
-so the executable updates it in place instead of copying per round. This
-check walks ``src/repro/algorithms`` and ``src/repro/launch`` with ``ast``
-and fails on any ``jax.jit(...)`` call that neither passes
-``donate_argnums=``/``donate_argnames=`` nor carries an explicit
-``# no-donate: <reason>`` comment on the call line (or the line above) —
-so a new jit call site cannot silently omit donation for carried state.
+Thin shim over the ``donate-jit`` rule of the unified lint registry
+(``repro.analysis.lints``; CLI: ``scripts/lint.py``) — kept so existing
+invocations and docs pointing here keep working. Output format and exit
+semantics are unchanged from the original standalone checker.
 
-Usage: python scripts/check_donation.py  (run by scripts/run_tests.sh)
+Usage: python scripts/check_donation.py  (CI runs scripts/lint.py instead)
 """
 
 from __future__ import annotations
 
-import ast
 import os
 import sys
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-SCAN_DIRS = (
-    os.path.join(REPO, "src", "repro", "algorithms"),
-    os.path.join(REPO, "src", "repro", "launch"),
+sys.path.insert(
+    0,
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "src"),
 )
-DONATE_KEYWORDS = {"donate_argnums", "donate_argnames"}
-MARKER = "# no-donate:"
 
-
-def _is_jax_jit(call: ast.Call) -> bool:
-    f = call.func
-    return (
-        isinstance(f, ast.Attribute)
-        and f.attr == "jit"
-        and isinstance(f.value, ast.Name)
-        and f.value.id == "jax"
-    )
-
-
-def check_file(path: str) -> list:
-    with open(path) as fh:
-        src = fh.read()
-    lines = src.splitlines()
-    problems = []
-    for node in ast.walk(ast.parse(src, filename=path)):
-        if not (isinstance(node, ast.Call) and _is_jax_jit(node)):
-            continue
-        if any(kw.arg in DONATE_KEYWORDS for kw in node.keywords):
-            continue
-        # opt-out marker on the call line or the line above it
-        lo = max(node.lineno - 2, 0)
-        hi = min(node.end_lineno, len(lines))
-        window = lines[lo:hi]
-        if any(MARKER in ln for ln in window):
-            continue
-        rel = os.path.relpath(path, REPO)
-        problems.append(
-            f"{rel}:{node.lineno}: jax.jit without donate_argnums — donate "
-            f"the carried state, or mark the call with "
-            f"'{MARKER} <reason>' if no arg is round-to-round state"
-        )
-    return problems
+from repro.analysis import lints  # noqa: E402  (after sys.path setup)
 
 
 def main() -> int:
-    problems = []
-    for root_dir in SCAN_DIRS:
-        for dirpath, _dirnames, filenames in os.walk(root_dir):
-            for name in sorted(filenames):
-                if name.endswith(".py"):
-                    problems.extend(check_file(os.path.join(dirpath, name)))
+    problems = lints.run_lints(rules=["donate-jit"])
     if problems:
         print("donation lint failed:", file=sys.stderr)
-        for p in problems:
-            print("  " + p, file=sys.stderr)
+        for v in problems:
+            print("  " + v.format(), file=sys.stderr)
         return 1
     print("donation lint: OK")
     return 0

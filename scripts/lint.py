@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Unified repo lint CLI over the ``repro.analysis.lints`` rule registry.
+
+Runs every registered rule (or a named subset) against the repo tree and
+reports violations. This is the single home for repo-convention checks —
+the compat-surface grep and the donation lint that used to be inline in
+``scripts/run_tests.sh`` both live here now.
+
+Usage:
+    python scripts/lint.py                 # all rules, human output
+    python scripts/lint.py --json          # machine output (CI)
+    python scripts/lint.py donate-jit      # one rule
+    python scripts/lint.py --list          # show the registry
+
+Suppression: ``# lint: disable=<rule>`` on the flagged line or the line
+above (``donate-jit`` also honors its richer ``# no-donate: <reason>``).
+
+Exit status: 0 clean, 1 violations, 2 usage error (unknown rule).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(
+    0,
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "src"),
+)
+
+from repro.analysis import lints  # noqa: E402  (after sys.path setup)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument(
+        "rules", nargs="*",
+        help="rule names to run (default: every registered rule)",
+    )
+    parser.add_argument(
+        "--json", action="store_true", dest="as_json",
+        help="emit a JSON report on stdout",
+    )
+    parser.add_argument(
+        "--root", default=None,
+        help="repo root to lint (default: this checkout)",
+    )
+    parser.add_argument(
+        "--list", action="store_true", dest="list_rules",
+        help="list registered rules and exit",
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(lints.RULES):
+            print(f"{name}: {lints.RULES[name].description}")
+        return 0
+
+    try:
+        violations = lints.run_lints(
+            root=args.root, rules=args.rules or None,
+        )
+    except KeyError as e:
+        print(f"lint: {e.args[0]}", file=sys.stderr)
+        return 2
+
+    ran = sorted(args.rules) if args.rules else sorted(lints.RULES)
+    if args.as_json:
+        print(json.dumps({
+            "ok": not violations,
+            "rules": ran,
+            "violations": [v.to_dict() for v in violations],
+        }, indent=2))
+    elif violations:
+        print("lint failed:", file=sys.stderr)
+        for v in violations:
+            print(f"  [{v.rule}] {v.format()}", file=sys.stderr)
+    else:
+        print(f"lint: OK ({len(ran)} rules)")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

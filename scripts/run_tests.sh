@@ -16,19 +16,12 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export REPRO_HOST_DEVICES="${REPRO_HOST_DEVICES:-8}"
 
-# Compat convention check (ROADMAP.md): no direct version-sensitive JAX
-# surfaces outside repro/compat. Must be empty or the run fails.
-violations="$(grep -rn --include='*.py' 'AxisType\|cost_analysis()' src/ | grep -v compat || true)"
-if [ -n "$violations" ]; then
-  echo "compat violation: version-sensitive JAX API used outside repro/compat:" >&2
-  echo "$violations" >&2
-  exit 1
-fi
-
-# Donation lint (ROADMAP "Compiled plan executor"): every jax.jit in the
-# hot layers either donates its carried state or carries an explicit
-# "# no-donate: <reason>" marker.
-python scripts/check_donation.py
+# Repo lints (ROADMAP "Static analysis & lints"): the unified rule registry
+# in repro.analysis.lints — compat surface, donation discipline, version
+# branches, jit-of-plan-stages. Replaces the former inline compat grep and
+# the scripts/check_donation.py invocation (both rules live in the
+# registry); any violation fails tier-1.
+python scripts/lint.py --json
 
 # Examples smoke-run: the quickstart exercises the full authoring surface
 # (flat + nested placements, plan IR, Beam emitter, fused compressed

@@ -1,0 +1,123 @@
+"""Static analysis for MapReduce plans + the unified repo lint registry.
+
+Two halves (ROADMAP "Static analysis" conventions):
+
+* **Plan-IR analyses** — passes that run on a :class:`MapReducePlan`
+  without executing it, surfaced as ``plan.analyze()``:
+
+  - :func:`check_placement_safety` — the full placement-lattice pass
+    (comm-free local stages at all depths, broadcast/reduce monotonicity
+    and pairing, loop-carry stability);
+  - :func:`analyze_donation` — static donation/aliasing over
+    ``plan.compile``'s lowering (use-after-donate, dropped donations with
+    the why, loop-carry donate-eligibility);
+  - :func:`analyze_retrace` — fingerprint-unstable captures (the
+    zero-retrace invariant's silent killers), plus
+    :func:`explain_fingerprint_mismatch` for differential diagnosis;
+  - :func:`estimate_comm_cost` — per-stage wire bytes from the IR (DCN vs
+    ICI by placement level, int8 ``compress`` tags applied), with
+    :func:`cross_validate_comm_cost` checking the geometry against
+    ``compat.cost_analysis`` on compiled programs.
+
+* **Lint framework** — ``repro.analysis.lints`` (run via
+  ``scripts/lint.py``): a rule registry with per-line suppression and JSON
+  output, absorbing the compat grep and the donation lint.
+
+Heavy submodules load lazily (PEP 562) so ``from repro.analysis import
+lints`` — the lint CLI's only need — stays JAX-free.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from .findings import AnalysisReport, Finding
+
+__all__ = [
+    "AnalysisReport",
+    "Finding",
+    "analyze_plan",
+    "analyze_donation",
+    "analyze_retrace",
+    "check_placement_safety",
+    "estimate_comm_cost",
+    "cross_validate_comm_cost",
+    "explain_fingerprint_mismatch",
+    "lints",
+]
+
+_LAZY = {
+    "check_placement_safety": ("placement_safety", "check_placement_safety"),
+    "analyze_donation": ("donation", "analyze_donation"),
+    "analyze_retrace": ("retrace", "analyze_retrace"),
+    "explain_fingerprint_mismatch": ("retrace", "explain_fingerprint_mismatch"),
+    "estimate_comm_cost": ("commcost", "estimate_comm_cost"),
+    "cross_validate_comm_cost": ("commcost", "cross_validate"),
+    "lints": ("lints", None),
+}
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from . import lints  # noqa: F401
+    from .commcost import cross_validate as cross_validate_comm_cost  # noqa: F401
+    from .commcost import estimate_comm_cost  # noqa: F401
+    from .donation import analyze_donation  # noqa: F401
+    from .placement_safety import check_placement_safety  # noqa: F401
+    from .retrace import analyze_retrace  # noqa: F401
+    from .retrace import explain_fingerprint_mismatch  # noqa: F401
+
+
+def __getattr__(name):
+    entry = _LAZY.get(name)
+    if entry is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    module = importlib.import_module(f".{entry[0]}", __name__)
+    value = module if entry[1] is None else getattr(module, entry[1])
+    globals()[name] = value
+    return value
+
+
+def analyze_plan(
+    plan,
+    *,
+    donate_argnums=(),
+    cross_validate: bool = False,
+    comm_cost: bool = True,
+) -> AnalysisReport:
+    """Run every plan-IR pass over ``plan`` and aggregate the findings.
+
+    ``donate_argnums`` feeds the donation/aliasing pass (pass the same
+    tuple you would hand ``plan.compile``). ``cross_validate=True``
+    additionally jits each plain reduce standalone and checks the comm
+    model against ``compat.cost_analysis`` (slow: one compile per comm
+    stage). The report's :attr:`~AnalysisReport.ok` is True iff no pass
+    produced an *error* — the oracle-suite bar; warnings and infos are
+    hazard heuristics and structural notes.
+    """
+    from . import commcost, donation, placement_safety, retrace
+
+    report = AnalysisReport()
+    report.findings.extend(placement_safety.check_placement_safety(plan))
+    report.findings.extend(
+        donation.analyze_donation(plan, donate_argnums=donate_argnums)
+    )
+    report.findings.extend(retrace.analyze_retrace(plan))
+    if comm_cost:
+        cost = commcost.estimate_comm_cost(plan)
+        report.comm_cost = cost
+        report.findings.extend(cost.findings)
+    if cross_validate:
+        report.findings.extend(commcost.cross_validate(plan))
+    return report
+
+
+def donation_report(compiled_plan) -> AnalysisReport:
+    """Donation/aliasing report for a ``CompiledPlan`` (its argnums applied)."""
+    from . import donation
+
+    report = AnalysisReport()
+    report.findings.extend(donation.analyze_donation(
+        compiled_plan.plan, donate_argnums=compiled_plan.donate_argnums
+    ))
+    return report

@@ -1,0 +1,180 @@
+"""Donation/aliasing analysis over the compiled plan's lowering.
+
+``plan.compile(donate_argnums=...)`` hands the donated flat args to one
+``jax.jit``; XLA then tries to alias each donated input buffer to an output
+of matching shape/dtype and silently *drops* the donation (with a runtime
+warning, at best) when nothing matches. This pass re-derives the aliasing
+decision statically from the plan IR and reports, ahead of compilation:
+
+* ``donation/bad-argnum`` (error) — the argnum does not name a plan input;
+* ``donation/use-after-donate`` (error) — a later stage (or the plan's own
+  output list) reads a donated input *after* the stage that defines the
+  output its buffer aliases. Inside one executable XLA schedules around
+  this; across the staged MapReduce boundary (Beam/federated backends, or
+  a future per-stage dispatch split) the read would observe an
+  overwritten buffer — the plan-level discipline is that a donated input's
+  last read is the stage producing its alias;
+* ``donation/dropped`` (warning) — no un-aliased output matches the donated
+  input's shape/dtype, with the *why* spelled out (what the outputs look
+  like), instead of XLA's silent drop;
+* ``donation/unused`` (warning) — a donated input no stage reads;
+* ``donation/carry-not-eligible`` (warning) — a ``LoopStage`` carry whose
+  initial value is read again after the loop (or returned directly), so
+  the lowered ``lax.scan``/``while_loop`` cannot update the carry buffer
+  in place and every round pays a copy. Checked for every loop at every
+  depth, independent of ``donate_argnums``.
+
+The aliasing model mirrors XLA's first-fit matching on (shape, dtype) in
+output order; it is deliberately conservative and explains itself rather
+than guessing at backend-specific layouts.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+from repro.core import interpreter as interp
+from repro.core.interpreter import LoopStage, _is_literal
+
+from .findings import Finding
+
+
+def _aval_key(atom) -> Tuple:
+    aval = atom.aval
+    return (tuple(aval.shape), str(aval.dtype))
+
+
+def _shape_str(atom) -> str:
+    aval = atom.aval
+    return f"{aval.dtype}[{','.join(str(d) for d in aval.shape)}]"
+
+
+def analyze_donation(plan, donate_argnums: Sequence[int] = ()) -> List[Finding]:
+    findings: List[Finding] = []
+    invars = plan.jaxpr.jaxpr.invars
+    io = plan.stage_io()
+    n_stages = len(io)
+
+    # Per top-level stage: where each atom is last read / first defined.
+    last_read: Dict[Any, int] = {}
+    def_stage: Dict[Any, int] = {}
+    for i, (_stage, reads, _outs) in enumerate(io):
+        for a in reads:
+            last_read[a] = i
+        for w in interp._stage_writes(_stage):
+            def_stage.setdefault(w, i)
+    for a in plan.out_atoms:
+        if not _is_literal(a):
+            last_read[a] = n_stages  # returning a value reads it
+
+    claimed: set = set()
+    for d in sorted(set(int(x) for x in donate_argnums)):
+        if d < 0 or d >= len(invars):
+            findings.append(Finding(
+                "donation/bad-argnum", "error",
+                f"donate_argnums includes {d} but the plan has only "
+                f"{len(invars)} flat inputs",
+            ))
+            continue
+        v = invars[d]
+        if v not in last_read:
+            findings.append(Finding(
+                "donation/unused", "warning",
+                f"donated input {d} ({_shape_str(v)}) is never read: the "
+                f"donation frees nothing the program was going to keep",
+            ))
+            continue
+        alias = None
+        for j, o in enumerate(plan.out_atoms):
+            if _is_literal(o) or j in claimed:
+                continue
+            if _aval_key(o) == _aval_key(v):
+                alias = (j, o)
+                claimed.add(j)
+                break
+        if alias is None:
+            outs = ", ".join(
+                "literal" if _is_literal(o) else _shape_str(o)
+                for o in plan.out_atoms
+            )
+            findings.append(Finding(
+                "donation/dropped", "warning",
+                f"donated input {d} ({_shape_str(v)}) aliases no output: "
+                f"every output is either shape/dtype-incompatible or "
+                f"already aliased to an earlier donated input (outputs: "
+                f"[{outs}]). XLA drops the donation silently; either stop "
+                f"donating this arg or return its updated value",
+            ))
+            continue
+        j, o = alias
+        if o is v:
+            continue  # identity passthrough: the alias IS the last read
+        d_def = def_stage.get(o, -1)
+        reads_after = last_read.get(v, -1)
+        if reads_after > d_def:
+            where = (
+                "the plan's outputs" if reads_after == n_stages
+                else f"stage_{reads_after}"
+            )
+            findings.append(Finding(
+                "donation/use-after-donate", "error",
+                f"donated input {d} ({_shape_str(v)}) aliases output {j}, "
+                f"defined at stage_{d_def}, but is still read by {where}: "
+                f"the read observes a buffer the alias may have overwritten",
+                stage=f"stage_{d_def}" if d_def >= 0 else None,
+            ))
+    findings.extend(_check_carries(plan))
+    return findings
+
+
+def _check_carries(plan) -> List[Finding]:
+    """Donate-eligibility of every loop carry, at every nesting depth."""
+    findings: List[Finding] = []
+    _walk_carries(plan, "", findings)
+    return findings
+
+
+def _walk_carries(plan, prefix: str, findings: List[Finding]) -> None:
+    last_read: Dict[Any, int] = {}
+    for i, (_stage, reads, _outs) in enumerate(plan.stage_io()):
+        for a in reads:
+            last_read[a] = i
+    final = set(a for a in plan.out_atoms if not _is_literal(a))
+    for idx, stage in enumerate(plan.stages):
+        if isinstance(stage, LoopStage):
+            sname = f"stage_{prefix}{idx}"
+            eqn = stage.eqn
+            if stage.loop_kind == "scan":
+                nc, ncar = eqn.params["num_consts"], eqn.params["num_carry"]
+                carries = eqn.invars[nc : nc + ncar]
+            else:
+                cn, bn = (
+                    eqn.params["cond_nconsts"], eqn.params["body_nconsts"]
+                )
+                carries = eqn.invars[cn + bn :]
+            for j, a in enumerate(carries):
+                if _is_literal(a):
+                    continue
+                reasons = []
+                if last_read.get(a, -1) > idx:
+                    reasons.append(
+                        f"read again at stage_{prefix}{last_read[a]}"
+                    )
+                if a in final:
+                    reasons.append("returned as a plan output")
+                if reasons:
+                    findings.append(Finding(
+                        "donation/carry-not-eligible", "warning",
+                        f"loop carry {j} init ({_shape_str(a)}) is "
+                        f"{' and '.join(reasons)}: the lowered loop cannot "
+                        f"update the carry buffer in place, so every call "
+                        f"pays a copy of it",
+                        stage=sname,
+                    ))
+            if stage.cond_plan is not None:
+                _walk_carries(stage.cond_plan, f"{prefix}{idx}_c_", findings)
+            if stage.body_plan is not None:
+                _walk_carries(stage.body_plan, f"{prefix}{idx}_", findings)
+        elif hasattr(stage, "branch_plans"):
+            for b, bp in enumerate(stage.branch_plans):
+                _walk_carries(bp, f"{prefix}{idx}_b{b}_", findings)

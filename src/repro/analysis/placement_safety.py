@@ -1,0 +1,271 @@
+"""Placement-safety verifier: the full static pass behind ``check_locality``.
+
+``plan.check_locality()`` asserts one invariant (no communication primitive
+hidden inside a LocalCompute stage). This pass re-propagates the placement
+lattice over the *whole* plan — every stage, at every nesting depth,
+including ``CondStage`` branches and a ``while``'s predicate ``cond_plan`` —
+and verifies:
+
+* **comm-free local stages** (the ``check_locality`` invariant, reported as
+  a finding instead of an assertion, so one run surfaces every violation);
+* **lattice monotonicity**: a Broadcast moves its operand exactly one level
+  *down* the placement stack (depth i → i+1) and a Reduce exactly one level
+  *up* (depth i+1 → i); re-broadcasting a level a value already carries, or
+  reducing an outer level of a deeper value, leaves the stack-prefix
+  lattice and is an error (``build_plan`` raises on these at construction —
+  the pass re-derives them so hand-assembled or mutated plans are covered);
+* **broadcast/reduce placement pairing**: ``Broadcast.source`` /
+  ``Reduce.dest`` must name the addressed level's parent (``"server"`` at
+  the outermost level). MapReduce AD transposes a broadcast into a reduce
+  *at the same level* and vice versa, so a mispaired stage would transpose
+  into communication on the wrong link — checking the pairing statically
+  checks AD transposability ahead of ``jax.grad``;
+* **loop-carry stability**: a loop carry's body-output placement may not
+  sit deeper on the lattice than its body-input placement (``build_plan``
+  solves carries to a fixed point; instability here means the plan was
+  edited after construction and the loop would migrate values per
+  iteration);
+* a ``while`` predicate that does not land at the server (the driver owns
+  control flow; a partitioned predicate cannot steer it).
+
+Flat-API hierarchical reductions regroup ``(n, ...)`` to ``(P, n/P, ...)``
+and bind comm eqns against a *derived* two-level stack whose names differ
+from the plan's placement names. At that regroup boundary the operand-depth
+checks are information-free (the lattice chains are incomparable by
+construction), so the pass reports one ``placement/regroup-boundary`` info
+finding per plan and propagates placements exactly as ``build_plan`` does.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+from repro.core import interpreter as interp
+from repro.core.interpreter import (
+    Broadcast,
+    CondStage,
+    LocalCompute,
+    LoopStage,
+    PlacementSet,
+    Reduce,
+    _contains_comm,
+    _eqn_placement,
+    _eqn_subjaxprs,
+    _is_dropvar,
+    _is_literal,
+    _join,
+)
+
+from .findings import Finding
+
+
+def check_placement_safety(plan) -> List[Finding]:
+    """Run the placement-safety pass over ``plan`` and all sub-plans."""
+    findings: List[Finding] = []
+    _check_plan(plan, "", findings)
+    return findings
+
+
+def _check_plan(plan, prefix: str, findings: List[Finding]) -> None:
+    names = tuple(n for n, _ in plan.placements)
+    env: Dict[Any, PlacementSet] = {}
+    for v, p in zip(plan.jaxpr.jaxpr.invars, plan.invar_placements):
+        env[v] = p
+    for v in plan.jaxpr.jaxpr.constvars:
+        env[v] = ()
+    for v in plan.extra_consts:
+        env[v] = ()
+
+    def pl(a) -> PlacementSet:
+        if _is_literal(a):
+            return ()
+        return env.get(a, ())
+
+    regroup_reported = False
+
+    for idx, stage in enumerate(plan.stages):
+        sname = f"stage_{prefix}{idx}"
+        if isinstance(stage, LocalCompute):
+            for eqn in stage.eqns:
+                if eqn.primitive.name in interp._COMM or any(
+                    _contains_comm(sub.jaxpr) for sub in _eqn_subjaxprs(eqn)
+                ):
+                    findings.append(Finding(
+                        "placement/comm-in-local", "error",
+                        f"communication primitive ({eqn.primitive.name}) "
+                        f"inside a {stage.kind} stage: this control flow is "
+                        f"not staged as explicit MapReduce communication",
+                        stage=sname,
+                    ))
+                p: PlacementSet = ()
+                for a in eqn.invars:
+                    p = _join(p, pl(a))
+                for o in eqn.outvars:
+                    if not _is_dropvar(o):
+                        env[o] = p
+                if stage.at_groups != bool(p):
+                    findings.append(Finding(
+                        "placement/local-kind-mismatch", "warning",
+                        f"eqn {eqn.primitive.name} joins to lattice depth "
+                        f"{len(p)} but sits in a {stage.kind} stage",
+                        stage=sname,
+                    ))
+        elif isinstance(stage, Broadcast):
+            enames, i = _eqn_placement(stage.eqn)
+            derived = enames != names
+            in_pl = pl(stage.eqn.invars[0])
+            if derived:
+                if not regroup_reported:
+                    regroup_reported = True
+                    findings.append(Finding(
+                        "placement/regroup-boundary", "info",
+                        f"comm eqns bind against a derived stack "
+                        f"{'/'.join(enames)} inside a "
+                        f"{'/'.join(names) or 'server'} plan (flat-API "
+                        f"hierarchical regroup); operand-depth checks are "
+                        f"relaxed at this boundary",
+                        stage=sname,
+                    ))
+            else:
+                if len(in_pl) > i and in_pl[: i + 1] == enames[: i + 1]:
+                    findings.append(Finding(
+                        "placement/rebroadcast", "error",
+                        f"broadcast@{enames[i]} of a value already placed at "
+                        f"{'/'.join(in_pl)}: duplicates a level the value "
+                        f"carries, leaving the prefix lattice",
+                        stage=sname,
+                    ))
+                elif in_pl != enames[:i]:
+                    findings.append(Finding(
+                        "placement/broadcast-operand", "warning",
+                        f"broadcast@{enames[i]} expects its operand at "
+                        f"{'/'.join(enames[:i]) or 'server'}, lattice says "
+                        f"{'/'.join(in_pl) or 'server'}",
+                        stage=sname,
+                    ))
+            expected_src = "server" if i == 0 else enames[i - 1]
+            if stage.placement != enames[i] or stage.source != expected_src:
+                findings.append(Finding(
+                    "placement/pairing", "error",
+                    f"Broadcast stage tagged {stage.source}->"
+                    f"{stage.placement} but its eqn addresses level "
+                    f"{enames[i]} (parent {expected_src}); the AD transpose "
+                    f"would emit a reduce at the wrong level",
+                    stage=sname,
+                ))
+            for o in stage.eqn.outvars:
+                if not _is_dropvar(o):
+                    env[o] = enames[: i + 1]
+        elif isinstance(stage, Reduce):
+            enames, i = _eqn_placement(stage.eqn)
+            derived = enames != names
+            in_pl = pl(stage.eqn.invars[0])
+            if derived:
+                if not regroup_reported:
+                    regroup_reported = True
+                    findings.append(Finding(
+                        "placement/regroup-boundary", "info",
+                        f"comm eqns bind against a derived stack "
+                        f"{'/'.join(enames)} inside a "
+                        f"{'/'.join(names) or 'server'} plan (flat-API "
+                        f"hierarchical regroup); operand-depth checks are "
+                        f"relaxed at this boundary",
+                        stage=sname,
+                    ))
+            else:
+                if len(in_pl) > i + 1 and in_pl[: i + 1] == enames[: i + 1]:
+                    findings.append(Finding(
+                        "placement/outer-reduce", "error",
+                        f"{stage.op}@{enames[i]} reduces an outer level of a "
+                        f"value placed at {'/'.join(in_pl)}: the result "
+                        f"(inner levels without their parent) is not a stack "
+                        f"prefix",
+                        stage=sname,
+                    ))
+                elif in_pl != enames[: i + 1]:
+                    findings.append(Finding(
+                        "placement/reduce-operand", "warning",
+                        f"{stage.op}@{enames[i]} expects its operand at "
+                        f"{'/'.join(enames[: i + 1])}, lattice says "
+                        f"{'/'.join(in_pl) or 'server'}",
+                        stage=sname,
+                    ))
+            expected_dest = "server" if i == 0 else enames[i - 1]
+            if stage.placement != enames[i] or stage.dest != expected_dest:
+                findings.append(Finding(
+                    "placement/pairing", "error",
+                    f"Reduce stage tagged {stage.placement}->{stage.dest} "
+                    f"but its eqn addresses level {enames[i]} (parent "
+                    f"{expected_dest}); the AD transpose would emit a "
+                    f"broadcast at the wrong level",
+                    stage=sname,
+                ))
+            for o in stage.eqn.outvars:
+                if not _is_dropvar(o):
+                    env[o] = enames[:i]
+        elif isinstance(stage, LoopStage):
+            _check_loop(plan, stage, idx, prefix, env, pl, findings)
+        elif isinstance(stage, CondStage):
+            for b, bp in enumerate(stage.branch_plans):
+                _check_plan(bp, f"{prefix}{idx}_b{b}_", findings)
+            for j, o in enumerate(stage.eqn.outvars):
+                if _is_dropvar(o):
+                    continue
+                p: PlacementSet = ()
+                for bp in stage.branch_plans:
+                    p = _join(p, bp.outvar_placements[j])
+                env[o] = p
+
+
+def _check_loop(plan, stage, idx: int, prefix: str, env, pl, findings) -> None:
+    sname = f"stage_{prefix}{idx}"
+    eqn = stage.eqn
+    body = stage.body_plan
+    if stage.loop_kind == "scan":
+        nc = eqn.params["num_consts"]
+        ncar = eqn.params["num_carry"]
+        carry_in = body.invar_placements[nc : nc + ncar]
+        carry_out = body.outvar_placements[:ncar]
+        num_ys = len(eqn.outvars) - ncar
+        out_pl = list(carry_in) + [()] * num_ys
+    else:  # while
+        cn, bn = eqn.params["cond_nconsts"], eqn.params["body_nconsts"]
+        carry_in = body.invar_placements[bn:]
+        carry_out = body.outvar_placements
+        out_pl = list(carry_in)
+        if stage.cond_plan is not None:
+            _check_plan(stage.cond_plan, f"{prefix}{idx}_c_", findings)
+            if stage.cond_plan.outvar_placements[0] != ():
+                findings.append(Finding(
+                    "placement/while-pred-placed", "warning",
+                    f"while predicate lands at "
+                    f"{'/'.join(stage.cond_plan.outvar_placements[0])}, not "
+                    f"the server: the driver cannot steer a partitioned "
+                    f"predicate",
+                    stage=sname,
+                ))
+        operands = eqn.invars[cn : cn + bn] + eqn.invars[cn + bn :]
+        body_expect = body.invar_placements
+        for j, (a, exp) in enumerate(zip(operands, body_expect)):
+            if _join(pl(a), exp) != exp:
+                findings.append(Finding(
+                    "placement/loop-input", "warning",
+                    f"while operand {j} placed at "
+                    f"{'/'.join(pl(a)) or 'server'} but the body binder "
+                    f"expects at most {'/'.join(exp) or 'server'}",
+                    stage=sname,
+                ))
+    for j, (ci, co) in enumerate(zip(carry_in, carry_out)):
+        if _join(ci, co) != ci:
+            findings.append(Finding(
+                "placement/loop-carry-unstable", "error",
+                f"loop carry {j} enters the body at "
+                f"{'/'.join(ci) or 'server'} but exits at "
+                f"{'/'.join(co)}: the carry climbs the lattice per "
+                f"iteration (build_plan's fixed point was not applied)",
+                stage=sname,
+            ))
+    _check_plan(body, f"{prefix}{idx}_", findings)
+    for o, p in zip(eqn.outvars, out_pl):
+        if not _is_dropvar(o):
+            env[o] = p

@@ -1,0 +1,137 @@
+"""Retrace-hazard detector: fingerprint-unstable captures, found statically.
+
+The executable cache keys on ``plan_fingerprint`` — which hashes, among the
+structural components, the **values** of every captured const (see
+``runtime/executor.py``). That is what makes the cache sound (two plans
+with different baked-in constants must not share an executable), but it is
+also the zero-retrace invariant's silent killer: a Python scalar that gets
+closed over instead of passed as an input folds into the consts, varies per
+call, and turns every round into a fingerprint miss → full retrace.
+
+This pass walks every captured const and cache-key input of a plan (and all
+sub-plans) and flags:
+
+* ``retrace/object-const`` (error) — a const with object dtype; its bytes
+  are id-dependent, so the fingerprint differs across *identical* values;
+* ``retrace/unstable-const`` (warning) — a 0-d/1-element const: the classic
+  round counter / learning rate folded into the trace. If it varies per
+  call, every call recompiles; pass it as a plan input instead;
+* ``retrace/large-const`` (info) — a const above 1 MiB: fingerprinting
+  hashes its full bytes every ``plan.compile`` and the value is baked into
+  the executable (it should probably be an input);
+* ``retrace/weak-type-input`` (info) — a weak-typed plan input: the aval
+  cache key includes ``weak_type``, so alternating Python scalars and
+  arrays at the same position doubles the executable cache.
+
+:func:`explain_fingerprint_mismatch` is the differential half: given two
+plans that *should* share an executable but do not, it pinpoints which
+fingerprint component (or exactly which const) differs.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import interpreter as interp
+
+from .findings import Finding
+
+_LARGE_CONST_BYTES = 1 << 20
+
+
+def analyze_retrace(plan) -> List[Finding]:
+    findings: List[Finding] = []
+    for pi, p in enumerate(interp._all_plans(plan)):
+        where = "top-level plan" if pi == 0 else f"sub-plan {pi}"
+        for ci, (atom, val) in enumerate(p.const_env().items()):
+            arr = np.asarray(val)
+            label = f"const {ci} of the {where} ({arr.dtype}{list(arr.shape)})"
+            if arr.dtype == object:
+                findings.append(Finding(
+                    "retrace/object-const", "error",
+                    f"{label} has object dtype: its fingerprint bytes are "
+                    f"identity-dependent, so structurally identical plans "
+                    f"never share an executable",
+                ))
+                continue
+            if arr.size <= 1:
+                findings.append(Finding(
+                    "retrace/unstable-const", "warning",
+                    f"{label} is a scalar folded into the captured consts "
+                    f"(value {arr.reshape(-1)[0] if arr.size else '<empty>'})"
+                    f": plan_fingerprint hashes const VALUES, so if this "
+                    f"varies per call every call misses the executable "
+                    f"cache and retraces — pass it as a plan input instead",
+                ))
+            elif arr.nbytes > _LARGE_CONST_BYTES:
+                findings.append(Finding(
+                    "retrace/large-const", "info",
+                    f"{label} is {arr.nbytes} bytes: fingerprinting hashes "
+                    f"it on every compile and the value is baked into the "
+                    f"executable; consider passing it as a plan input",
+                ))
+    for i, v in enumerate(plan.jaxpr.jaxpr.invars):
+        if bool(getattr(v.aval, "weak_type", False)):
+            findings.append(Finding(
+                "retrace/weak-type-input", "info",
+                f"plan input {i} is weak-typed: the executable cache key "
+                f"includes weak_type, so mixing Python scalars and arrays "
+                f"at this position across calls splits the cache",
+            ))
+    return findings
+
+
+def explain_fingerprint_mismatch(plan_a, plan_b) -> List[str]:
+    """Why do two plans not share an executable? One line per difference.
+
+    Compares the plans component by component using the same decomposition
+    ``plan_fingerprint`` hashes (``runtime.executor.fingerprint_parts``),
+    then drills into the consts pairwise so a fingerprint-unstable capture
+    is named precisely. Returns ``[]`` iff the fingerprints are equal.
+    """
+    from repro.runtime import executor  # lazy: analysis must not need jit
+
+    parts_a = dict(executor.fingerprint_components(plan_a))
+    parts_b = dict(executor.fingerprint_components(plan_b))
+    diffs: List[str] = []
+    structural = [k for k in parts_a if not k.startswith("const[")]
+    for k in structural:
+        if parts_a.get(k) != parts_b.get(k):
+            diffs.append(f"component {k!r} differs")
+    consts_a = _flat_consts(plan_a)
+    consts_b = _flat_consts(plan_b)
+    if len(consts_a) != len(consts_b):
+        diffs.append(
+            f"captured const count differs: {len(consts_a)} vs "
+            f"{len(consts_b)}"
+        )
+    for i, ((aa, va), (ab, vb)) in enumerate(zip(consts_a, consts_b)):
+        arr_a, arr_b = np.asarray(va), np.asarray(vb)
+        if str(aa.aval) != str(ab.aval) or arr_a.shape != arr_b.shape or (
+            arr_a.dtype != arr_b.dtype
+        ):
+            diffs.append(
+                f"const[{i}] aval differs: {aa.aval} vs {ab.aval}"
+            )
+        elif arr_a.tobytes() != arr_b.tobytes():
+            if arr_a.size <= 4:
+                diffs.append(
+                    f"const[{i}] ({arr_a.dtype}{list(arr_a.shape)}) VALUE "
+                    f"differs: {arr_a.tolist()} vs {arr_b.tolist()} — a "
+                    f"fingerprint-unstable capture; pass it as a plan input"
+                )
+            else:
+                diffs.append(
+                    f"const[{i}] ({arr_a.dtype}{list(arr_a.shape)}) value "
+                    f"bytes differ — a fingerprint-unstable capture"
+                )
+    return diffs
+
+
+def _flat_consts(plan):
+    out = []
+    for p in interp._all_plans(plan):
+        out.extend(p.const_env().items())
+    return out

@@ -9,7 +9,7 @@ dict directly. Everything in this repo reads costs through
 from __future__ import annotations
 
 from numbers import Number
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 
 def normalize_cost_analysis(raw: Any) -> Dict[str, Any]:
@@ -54,5 +54,13 @@ def cost_flops(compiled) -> float:
     return float(cost_analysis(compiled).get("flops", 0.0))
 
 
-def cost_bytes_accessed(compiled) -> float:
-    return float(cost_analysis(compiled).get("bytes accessed", 0.0))
+def cost_bytes_accessed(compiled) -> Optional[float]:
+    """Total "bytes accessed" of a compiled program, or ``None``.
+
+    ``None`` means the backend reports no cost model (or no such metric) —
+    distinct from a genuine 0.0 measurement. Callers that previously relied
+    on the silent-0.0 behavior must decide: treat ``None`` as "unavailable"
+    (skip/annotate), never as "zero traffic".
+    """
+    value = cost_analysis(compiled).get("bytes accessed")
+    return None if value is None else float(value)

@@ -26,7 +26,11 @@ from .api import (
     reduce_weighted_mean,
     current_context,
 )
-from .hierarchical import cross_pod_bytes, hierarchical_reduce_mean
+from .hierarchical import (
+    cross_pod_bytes,
+    hierarchical_reduce_mean,
+    int8_wire_ratio,
+)
 from .interpreter import (
     Broadcast,
     CondStage,
@@ -64,6 +68,7 @@ __all__ = [
     "current_context",
     "hierarchical_reduce_mean",
     "cross_pod_bytes",
+    "int8_wire_ratio",
     "MapReducePlan",
     "Broadcast",
     "Reduce",

@@ -220,9 +220,34 @@ def hierarchical_reduce_mean(
         return _staged_reduce(regrouped, nested, compress_fn, use_fused)
 
 
+def int8_wire_ratio(block: int = 256) -> float:
+    """Wire bytes of the packed int8 format as a fraction of f32 bytes.
+
+    The packed format (``repro.compression``, PACK_COLS-block scheme; also
+    ``models/tpcomm.int8_wire_bytes``) ships 1 byte per value plus one f32
+    scale per ``block`` values: ``(1 + 4/block) / 4`` of the f32 payload —
+    NOT the naive 0.25. For the default 256-block that is ~0.2539.
+    """
+    return (1.0 + 4.0 / block) / 4.0
+
+
 def cross_pod_bytes(param_bytes: float, n: int, num_supergroups: int,
-                    compress_ratio: float = 1.0) -> dict:
-    """Napkin model: bytes crossing the slow (DCN) leg per round."""
+                    compress_ratio: float = 1.0,
+                    compress: "str | None" = None) -> dict:
+    """Napkin model: bytes crossing the slow (DCN) leg per round.
+
+    ``compress="int8"`` applies the *actual* packed wire ratio
+    (:func:`int8_wire_ratio`: payload + per-256-block f32 scales) instead of
+    a hand-supplied ``compress_ratio`` — use it to match what the fused
+    reduce+compress path really sends (the static analyzer's
+    ``plan.comm_cost()`` models the same format from the IR; the two are
+    pinned against each other in tests). ``compress_ratio`` remains for
+    custom schemes and is ignored when ``compress`` is given.
+    """
+    if compress is not None:
+        if compress != "int8":
+            raise ValueError(f"unknown compress scheme: {compress!r}")
+        compress_ratio = int8_wire_ratio()
     flat = n * param_bytes  # flat all-reduce moves every group's delta
     hier = num_supergroups * param_bytes * compress_ratio
     return {

@@ -472,6 +472,50 @@ class MapReducePlan:
         """
         return _BeamEmitter(self).emit()
 
+    # -- static analysis -----------------------------------------------------
+
+    def analyze(
+        self,
+        *,
+        donate_argnums: Sequence[int] = (),
+        cross_validate: bool = False,
+        comm_cost: bool = True,
+    ):
+        """Run every static-analysis pass over this plan without executing it.
+
+        Returns a :class:`repro.analysis.AnalysisReport`: placement safety
+        (the full-pass generalization of :meth:`check_locality`), donation/
+        aliasing for the given ``donate_argnums``, retrace hazards over the
+        captured consts, and the per-stage communication-cost model
+        (``report.comm_cost``). ``report.ok`` is True iff no pass found an
+        error; ``report.raise_if_errors()`` is the assert-style surface the
+        oracle suite uses. ``cross_validate=True`` additionally checks the
+        comm model against ``compat.cost_analysis`` on standalone-compiled
+        reduce eqns (slow: one compile per comm stage).
+        """
+        from repro import analysis as _analysis  # lazy: no core->analysis cycle
+
+        return _analysis.analyze_plan(
+            self,
+            donate_argnums=donate_argnums,
+            cross_validate=cross_validate,
+            comm_cost=comm_cost,
+        )
+
+    def comm_cost(self):
+        """Static per-stage wire-byte model (DCN/ICI split, compress tags).
+
+        Returns a :class:`repro.analysis.commcost.CommCostReport`; see
+        ``report.dcn_bytes`` / ``report.ici_bytes`` / ``report.per_stage``.
+        """
+        from repro import analysis as _analysis  # lazy: no core->analysis cycle
+
+        return _analysis.estimate_comm_cost(self)
+
+    def subplans(self) -> List["MapReducePlan"]:
+        """This plan and every nested sub-plan, depth-first in stage order."""
+        return list(_all_plans(self))
+
     # -- structural checks --------------------------------------------------
 
     def communication_stages(self, recursive: bool = False) -> List[Stage]:

@@ -163,11 +163,17 @@ def run_cell(arch: str, cell: str, mesh_kind: str = "single",
         coll = parse_collectives(hlo)
         coll_bytes = sum(v["operand_bytes"] for v in coll.values())
         flops = float(cost.get("flops", 0.0))
-        bytes_acc = float(cost.get("bytes accessed", 0.0))
+        # None = backend has no cost model — a different fact than a real
+        # 0.0 measurement; keep the distinction in the recorded result and
+        # feed the roofline a neutral 0.0 only in the unavailable case.
+        bytes_acc = compat.cost_bytes_accessed(compiled)
+        bytes_available = bytes_acc is not None
         # NOTE: XLA cost_analysis counts while-loop (scan) bodies once; these
         # values are structural evidence. Magnitudes come from the analytic
         # model below (validated against HLO on unscanned configs in tests).
-        hlo_terms = roofline_terms(flops, bytes_acc, coll_bytes)
+        hlo_terms = roofline_terms(
+            flops, bytes_acc if bytes_available else 0.0, coll_bytes
+        )
         mesh_model = (
             analytic.MeshModel.multi() if mesh_kind_is_multi(chips)
             else analytic.MeshModel.single()
@@ -190,7 +196,8 @@ def run_cell(arch: str, cell: str, mesh_kind: str = "single",
             ),
             hlo_cost=dict(
                 flops_per_device=flops,
-                bytes_per_device=bytes_acc,
+                bytes_per_device=bytes_acc,  # None: cost model unavailable
+                bytes_available=bytes_available,
                 note="while-loop bodies counted once by XLA",
                 **{f"term_{k}": round(v, 6) for k, v in hlo_terms.items()},
             ),

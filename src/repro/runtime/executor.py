@@ -74,6 +74,8 @@ __all__ = [
     "TraceCounter",
     "clear_executor_cache",
     "compile_plan",
+    "fingerprint_components",
+    "fingerprint_parts",
     "fuse_stages",
     "plan_fingerprint",
 ]
@@ -109,13 +111,60 @@ class TraceCounter:
 # ---------------------------------------------------------------------------
 
 
-def _hash_update_consts(h, plan) -> None:
+def fingerprint_parts(plan) -> List[Tuple[str, bytes]]:
+    """The named byte components ``plan_fingerprint`` hashes, in hash order.
+
+    Concatenating the byte values in order reproduces the exact stream
+    ``plan_fingerprint`` feeds sha1 — the fingerprint is defined over this
+    decomposition, so the two can never drift. The names exist for the
+    analysis layer: ``repro.analysis.explain_fingerprint_mismatch`` compares
+    plans part by part to say *which* component broke executable sharing.
+    """
+    parts: List[Tuple[str, bytes]] = [
+        ("placements", str(plan.placements).encode()),
+        (
+            "partitioned_invars",
+            str(tuple(int(d) for d in plan.partitioned_invars)).encode(),
+        ),
+        (
+            "partitioned_outvars",
+            str(tuple(int(d) for d in plan.partitioned_outvars)).encode(),
+        ),
+        # The jaxpr pretty-printer assigns var names deterministically, so
+        # the string is canonical for structurally identical programs (and
+        # covers every sub-jaxpr, so LoopStage/CondStage bodies included).
+        ("jaxpr", str(plan.jaxpr.jaxpr).encode()),
+        (
+            "stage_skeleton",
+            "|".join(
+                name + ":" + s.kind for name, s, _ in plan.named_stages()
+            ).encode(),
+        ),
+    ]
+    idx = 0
     for p in interp._all_plans(plan):
         for atom, val in p.const_env().items():
-            h.update(str(getattr(atom, "aval", None)).encode())
             arr = np.asarray(val)
-            h.update(str((arr.shape, str(arr.dtype))).encode())
-            h.update(arr.tobytes())
+            parts.append((
+                f"const[{idx}]",
+                str(getattr(atom, "aval", None)).encode()
+                + str((arr.shape, str(arr.dtype))).encode()
+                + arr.tobytes(),
+            ))
+            idx += 1
+    return parts
+
+
+def fingerprint_components(plan) -> List[Tuple[str, str]]:
+    """Per-component sha1 hexdigests of :func:`fingerprint_parts`.
+
+    Cheap to diff between two plans; used by the retrace-hazard analysis to
+    explain fingerprint mismatches without shipping raw const bytes around.
+    """
+    return [
+        (name, hashlib.sha1(data).hexdigest())
+        for name, data in fingerprint_parts(plan)
+    ]
 
 
 def plan_fingerprint(plan) -> str:
@@ -127,18 +176,8 @@ def plan_fingerprint(plan) -> str:
     one compiled artifact across re-plans.
     """
     h = hashlib.sha1()
-    h.update(str(plan.placements).encode())
-    h.update(str(tuple(int(d) for d in plan.partitioned_invars)).encode())
-    h.update(str(tuple(int(d) for d in plan.partitioned_outvars)).encode())
-    # The jaxpr pretty-printer assigns var names deterministically, so the
-    # string is canonical for structurally identical programs (and covers
-    # every sub-jaxpr, so LoopStage/CondStage bodies are included).
-    h.update(str(plan.jaxpr.jaxpr).encode())
-    h.update(
-        "|".join(name + ":" + s.kind for name, s, _ in plan.named_stages())
-        .encode()
-    )
-    _hash_update_consts(h, plan)
+    for _name, data in fingerprint_parts(plan):
+        h.update(data)
     return h.hexdigest()
 
 
@@ -520,6 +559,18 @@ class CompiledPlan:
     def num_stage_units(self) -> int:
         """Dispatch units after fusing adjacent local stages."""
         return len(fuse_stages(self.plan.stages))
+
+    def donation_report(self):
+        """Static donation/aliasing analysis for this plan's argnums.
+
+        Answers, without compiling: which donated inputs alias an output,
+        which donations are dropped (and why), and whether any stage reads
+        a donated buffer after its alias target is produced. Returns a
+        :class:`repro.analysis.AnalysisReport`.
+        """
+        from repro import analysis  # lazy: executor must not require analysis
+
+        return analysis.donation_report(self)
 
 
 def compile_plan(
