@@ -1,0 +1,167 @@
+"""Pipelined (1F1B fill/drain) vs single-stage round: step time + bubble.
+
+Measures the jitted per-call wall time of
+
+* ``single``    — the whole S-stage chain run as ONE stage over all M
+  microbatches (the no-pipelining baseline: every microbatch traverses the
+  full chain with no stage axis, i.e. what you get without the stage-kind
+  placement);
+* ``pipelined`` — ``algorithms.make_pipelined_round``'s fill/drain
+  schedule: one ``lax.scan`` over M + S - 1 ticks, ``stage_map`` compute +
+  ``stage_transfer`` advance per tick;
+* ``compiled``  — the SAME pipelined program staged through the plan
+  interpreter and lowered by ``plan.compile`` (the §5 path), checked
+  bitwise against the eager jit.
+
+and pairs each point with the analytic bubble fraction
+``(S-1)/(M+S-1)`` — the idle-slot share of the schedule — plus the static
+analyzer's ICI pricing of the per-tick stage transfer read off the plan IR.
+On a single CPU host the pipelined variant pays the bubble and the shifted
+buffer without any real stage parallelism, so the interesting number is the
+overhead ratio, not a speedup; the bubble column is the model-level claim.
+
+``BENCH_pipeline.json`` is a per-PR **trajectory** alongside
+``BENCH_hier.json``: each run appends (or replaces, for re-runs at the same
+commit) an entry keyed by the current git SHA. Invoked via
+``benchmarks.run`` (key ``pipeline``).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import core as drjax
+from repro.algorithms import (
+    PipelineConfig,
+    make_pipelined_round,
+    pipeline_bubble_fraction,
+)
+from repro.launch import bench_log
+
+OUT_PATH = bench_log.bench_path("pipeline")
+
+
+def _time_interleaved(fns, argss, iters: int = 20, reps: int = 5):
+    """Best-of-reps per-call time, reps round-robined across fns so
+    transient host load hits every variant equally (same discipline as
+    benchmarks.hier_reduce — the ratio is the headline)."""
+    for fn, args in zip(fns, argss):
+        jax.block_until_ready(fn(*args))  # warmup/compile
+    best = [float("inf")] * len(fns)
+    for _ in range(reps):
+        for k, (fn, args) in enumerate(zip(fns, argss)):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            best[k] = min(best[k], (time.perf_counter() - t0) / iters)
+    return best
+
+
+def _stage_fns(s: int):
+    # Distinct per-stage weights so the chain is order-sensitive (a real
+    # MPMD pipeline is heterogeneous); each stage is one dense matmul.
+    def make(stage):
+        w = jax.random.normal(
+            jax.random.PRNGKey(stage), (1,), jnp.float32
+        ) * 0.1 + 1.0
+
+        def fn(x):
+            return jnp.tanh(x) * w[0]
+
+        return fn
+
+    return tuple(make(i) for i in range(s))
+
+
+def _bench_point(s: int, m: int, d: int) -> dict:
+    fns = _stage_fns(s)
+    cfg = PipelineConfig(num_stages=s, num_microbatches=m)
+    round_fn = make_pipelined_round(fns, cfg)
+
+    def single(mbs):
+        def chain(x):
+            for fn in fns:
+                x = fn(x)
+            return x
+        return jax.vmap(chain)(mbs)
+
+    mbs = jax.random.normal(jax.random.PRNGKey(7), (m, d), jnp.float32)
+    act0 = jnp.zeros((s, d), jnp.float32)
+
+    plan = drjax.build_plan(
+        jax.make_jaxpr(round_fn)(mbs, act0),
+        round_fn.drjax_context,
+        partitioned_invars=(0, 1),
+    )
+    compiled = plan.compile()
+
+    # lint: disable=donate-jit  (bench baselines; inputs reused every rep)
+    single_us, pipe_us, compiled_us = (
+        t * 1e6 for t in _time_interleaved(
+            [jax.jit(single), jax.jit(round_fn), compiled],
+            [(mbs,), (mbs, act0), (mbs, act0)],
+        )
+    )
+
+    cost = plan.comm_cost()
+    transfer = [c for c in cost.per_stage if c.op == "stage_transfer"]
+    return {
+        "num_stages": s,
+        "num_microbatches": m,
+        "payload_floats": d,
+        "single_us_per_call": single_us,
+        "pipelined_us_per_call": pipe_us,
+        "compiled_us_per_call": compiled_us,
+        "pipelined_vs_single": pipe_us / single_us,
+        "bubble_fraction": pipeline_bubble_fraction(s, m),
+        "ticks": m + s - 1,
+        "transfer_ici_bytes": sum(c.wire_bytes for c in transfer),
+        "trace_count": compiled.trace_count,
+    }
+
+
+def run():
+    points = [
+        _bench_point(2, 8, 1 << 12),
+        _bench_point(4, 16, 1 << 10),
+    ]
+    bench_log.merge_entry(
+        {"points": points}, top_points=points, name="pipeline"
+    )
+    rows = []
+    for pt in points:
+        key = (f"pipeline_S{pt['num_stages']}_M{pt['num_microbatches']}"
+               f"_d{pt['payload_floats']}")
+        rows.append({
+            "name": f"{key}_single",
+            "us_per_call": f"{pt['single_us_per_call']:.1f}",
+            "derived": "no stage axis; vmapped chain",
+        })
+        rows.append({
+            "name": f"{key}_pipelined",
+            "us_per_call": f"{pt['pipelined_us_per_call']:.1f}",
+            "derived": (
+                f"bubble={pt['bubble_fraction']:.3f}; "
+                f"ticks={pt['ticks']}; "
+                f"vs_single={pt['pipelined_vs_single']:.2f}"
+            ),
+        })
+        rows.append({
+            "name": f"{key}_compiled_plan",
+            "us_per_call": f"{pt['compiled_us_per_call']:.1f}",
+            "derived": (
+                f"transfer_ici_bytes={pt['transfer_ici_bytes']:.0f}; "
+                f"trace_count={pt['trace_count']}"
+            ),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}")
+    print(f"wrote {OUT_PATH}")

@@ -217,3 +217,64 @@ print("fused plan comm cost: dcn_bytes=%.0f ici_bytes=%.0f" % (
 for c in cost.per_stage:
     print(f"  {c.stage}: {c.op}@{c.placement} over {c.link}, "
           f"{c.wire_format}, {c.wire_bytes:.0f} B")
+
+# --- N-level stacks: three replica levels ------------------------------------
+
+# Placement stacks are no longer capped at two levels. A 3-level
+# (superpods, pods, clients) stack factorizes onto a
+# ("superpod", "pod", "data") mesh — `mesh_for_placements` accepts any
+# ordered stack and `placement_axes_for` names each level's mesh axis.
+# Reductions chain innermost-out, one fabric leg per level.
+
+
+@drjax.program(placements={"superpods": 2, "pods": 2, "clients": 2})
+def three_level_round(model, tasks):
+    grads = drjax.map_fn(lambda m, t: 2.0 * (m - t),
+                         (drjax.broadcast(model), tasks))
+    p1 = drjax.reduce_mean(grads, placement="clients")    # intra-pod ICI
+    p2 = drjax.reduce_mean(p1, placement="pods")          # intra-superpod
+    return drjax.reduce_mean(p2, placement="superpods")   # cross-superpod DCN
+
+
+tasks3 = jnp.arange(8, dtype=jnp.float32).reshape(2, 2, 2)
+print("\n3-level round:", three_level_round(jnp.float32(0.5), tasks3))
+
+# --- pipeline-stage placements: a 1F1B microbatch round ----------------------
+
+# A placement can carry kind="stages" instead of the default "replicas":
+# groups are pipeline stages, not data replicas. Broadcast/reduce are
+# rejected at a stage level; per-stage compute is `stage_map` (one fn per
+# stage) and stage-to-stage movement is `stage_transfer` (a shift along the
+# stage axis — its transpose is the backward pipeline, free from AD).
+# `make_pipelined_round` packages the fill/drain (1F1B) schedule: S stages
+# and M microbatches run in M + S - 1 ticks under one lax.scan.
+
+from repro.algorithms import (
+    PipelineConfig, make_pipelined_round, pipeline_bubble_fraction,
+)
+
+S, M, D = 2, 4, 8
+stage_fns = tuple((lambda s: (lambda x: x * (s + 1.0)))(s) for s in range(S))
+round_fn = make_pipelined_round(
+    stage_fns, PipelineConfig(num_stages=S, num_microbatches=M))
+
+mbs = jnp.arange(M * D, dtype=jnp.float32).reshape(M, D)
+act0 = jnp.zeros((S, D), jnp.float32)
+outs, _ = round_fn(mbs, act0)
+print("\npipelined round outs[0]:", outs[0],
+      "(== stage chain applied to microbatch 0)")
+print("bubble fraction (S-1)/(M+S-1):", pipeline_bubble_fraction(S, M))
+
+# The interpreter stages the schedule as one LOOP whose body carries a
+# TRANSFER eqn; plan.compile() lowers it to a single donation-aware
+# executable, still bitwise-equal to the eager run_plan oracle.
+pipe_plan = drjax.build_plan(
+    jax.make_jaxpr(round_fn)(mbs, act0),
+    round_fn.drjax_context,
+    partitioned_invars=(0, 1),  # M may equal S; skip the shape heuristic
+)
+print("\npipelined plan (note the [stages] level and TRANSFER):\n"
+      + pipe_plan.to_text())
+compiled_pipe = pipe_plan.compile()
+print("compiled pipeline:", compiled_pipe(mbs, act0)[0][0],
+      "== run_plan:", drjax.run_plan(pipe_plan, mbs, act0)[0][0])

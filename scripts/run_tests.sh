@@ -57,6 +57,35 @@ assert compiled.trace_count == 1, "compiled plan retraced on a repeat call"
 print("compiled-vs-interpreted smoke check: OK")
 PY
 
+# Pipelined-round smoke check: the 1F1B fill/drain schedule (stage-kind
+# placement, stage_map + stage_transfer under one scan) must build a plan
+# whose compiled executor is BITWISE equal to run_plan with zero retraces
+# (full coverage in tests/test_pipeline.py).
+python - <<'PY'
+import jax, jax.numpy as jnp, numpy as np
+from repro import core as drjax
+from repro.algorithms import PipelineConfig, make_pipelined_round
+
+fns = (lambda x: x * 2.0, lambda x: x + 1.0)
+round_fn = make_pipelined_round(
+    fns, PipelineConfig(num_stages=2, num_microbatches=4))
+mbs = jnp.arange(4 * 8, dtype=jnp.float32).reshape(4, 8)
+act0 = jnp.zeros((2, 8), jnp.float32)
+plan = drjax.build_plan(
+    jax.make_jaxpr(round_fn)(mbs, act0), round_fn.drjax_context,
+    partitioned_invars=(0, 1))
+compiled = plan.compile()
+ref = drjax.run_plan(plan, mbs, act0)
+out = compiled(mbs, act0)
+assert all(np.array_equal(np.asarray(a), np.asarray(b))
+           for a, b in zip(out, ref)), \
+    "compiled pipelined round diverged from run_plan (bitwise)"
+compiled(mbs, act0)
+assert compiled.trace_count == 1, "pipelined round retraced on repeat call"
+plan.analyze().raise_if_errors()
+print("pipelined-round smoke check: OK")
+PY
+
 # Fused reduce+compress smoke check: the interpret-mode Pallas kernel must be
 # BITWISE equal to its jnp oracle (fast; full coverage in test_fused_reduce).
 python - <<'PY'

@@ -13,6 +13,11 @@ from .async_rounds import (
 )
 from .maml import make_parallel_maml
 from .btm import branch_train_merge
+from .pipeline import (
+    PipelineConfig,
+    make_pipelined_round,
+    pipeline_bubble_fraction,
+)
 
 __all__ = [
     "LocalSGDConfig",
@@ -24,4 +29,7 @@ __all__ = [
     "make_hierarchical_async_round",
     "make_parallel_maml",
     "branch_train_merge",
+    "PipelineConfig",
+    "make_pipelined_round",
+    "pipeline_bubble_fraction",
 ]

@@ -1,8 +1,8 @@
 """Communication-cost pass: per-stage wire bytes derived from the plan IR.
 
 Replaces the napkin ``cross_pod_bytes`` spreadsheet model with numbers read
-off the IR itself. For every Broadcast/Reduce stage the pass derives, from
-the eqn's operand/output avals and its placement params:
+off the IR itself. For every Broadcast/Reduce/Transfer stage the pass
+derives, from the eqn's operand/output avals and its placement params:
 
 * the **link**: the eqn's addressed stack index splits the fabric — level 0
   (outermost, e.g. ``pods``) crosses the slow DCN leg, deeper levels ride
@@ -48,6 +48,7 @@ from repro.core.interpreter import (
     CondStage,
     LoopStage,
     Reduce,
+    Transfer,
     _eqn_placement,
     _is_dropvar,
     _is_literal,
@@ -69,7 +70,7 @@ def int8_wire_payload(values: int, block: int = INT8_BLOCK) -> float:
 @dataclasses.dataclass
 class CommStageCost:
     stage: str  # named_stages anchor
-    kind: str  # BROADCAST | REDUCE
+    kind: str  # BROADCAST | REDUCE | TRANSFER
     op: str  # broadcast | reduce_sum | reduce_mean | reduce_max
     placement: str  # addressed placement name
     link: str  # "dcn" (outermost level) | "ici" (inner levels)
@@ -137,7 +138,7 @@ def _walk(
     fmt: Dict[Any, str] = {}
     for idx, stage in enumerate(plan.stages):
         sname = f"stage_{prefix}{idx}"
-        if isinstance(stage, (Broadcast, Reduce)):
+        if isinstance(stage, (Broadcast, Reduce, Transfer)):
             cost = _comm_cost(stage, sname, mult, counted, fmt)
             per_stage.append(cost)
             if cost.counted:
@@ -201,6 +202,34 @@ def _comm_cost(stage, sname: str, mult: float, counted: bool, fmt) -> CommStageC
     eqn = stage.eqn
     enames, i = _eqn_placement(eqn)
     link = "dcn" if i == 0 else "ici"
+    if isinstance(stage, Transfer):
+        # Stage-to-stage activation hand-off: each stage ships its slot to
+        # its neighbor over ICI (the collective-permute the lowering emits),
+        # regardless of where the stage level sits in the stack. Non-wrap
+        # boundary stages send nothing (their payload is zero-filled
+        # locally), so |shift| stages per outer group drop out of the
+        # endpoint count; a wrap (ring) transfer keeps every stage busy.
+        aval = eqn.invars[0].aval
+        size = aval.shape[i]
+        shift = abs(int(eqn.params.get("shift", 1)))
+        wrap = bool(eqn.params.get("wrap", False))
+        outer = int(np.prod(aval.shape[:i], dtype=np.int64))
+        senders = size if wrap else max(size - min(shift, size), 0)
+        endpoints = outer * senders
+        _values, native = _nbytes(aval, i + 1)
+        return CommStageCost(
+            stage=sname,
+            kind="TRANSFER",
+            op="stage_transfer",
+            placement=stage.placement,
+            link="ici",
+            endpoints=endpoints,
+            payload_bytes=float(native),
+            wire_format="native",
+            multiplier=mult,
+            wire_bytes=endpoints * float(native) * mult,
+            counted=counted,
+        )
     if isinstance(stage, Reduce):
         aval = eqn.invars[0].aval
         endpoints = int(np.prod(aval.shape[: i + 1], dtype=np.int64))

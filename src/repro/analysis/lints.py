@@ -16,6 +16,10 @@ shell in ``scripts/run_tests.sh``:
   interpreter layer, and no jitting of ``run_plan``/``stage_fns`` stages
   anywhere else — use ``plan.compile()`` so the executable cache,
   fingerprinting and donation plumbing apply.
+* ``mesh-axes-literal`` — mesh axis-name tuples have exactly one home
+  (``launch/mesh.py``): no hard-coded ``("pod", "data")``-style tuples
+  elsewhere in ``src/`` — import ``REPLICA_AXES`` / use the mesh helpers,
+  so N-level mesh factorization changes land in one file.
 
 Suppression: append ``# lint: disable=<rule>`` (comma-separated for
 several rules) to the flagged line or the line above it. ``donate-jit``
@@ -236,6 +240,49 @@ def _no_version_branch(root: str) -> List[LintViolation]:
                         "version sniffing belongs in a repro.compat probe"
                     ),
                 ))
+    return out
+
+
+# Assembled via frozenset (an ast.Set in this file, never an ast.Tuple) so
+# the rule's own definition cannot flag itself.
+_MESH_AXIS_NAMES = frozenset({"pod", "data", "superpod", "stage", "model"})
+_MESH_AXES_HOME = "src/repro/launch/mesh.py"
+
+
+@rule(
+    "mesh-axes-literal",
+    "no hard-coded mesh axis-name tuples (e.g. a pod/data pair) outside "
+    "launch/mesh.py — import REPLICA_AXES or use the mesh helpers",
+)
+def _mesh_axes_literal(root: str) -> List[LintViolation]:
+    out: List[LintViolation] = []
+    for path in _py_files(os.path.join(root, "src")):
+        rel = _rel(path, root)
+        if rel == _MESH_AXES_HOME:
+            continue
+        with open(path) as fh:
+            src = fh.read()
+        for node in ast.walk(ast.parse(src, filename=path)):
+            if not isinstance(node, (ast.Tuple, ast.List)):
+                continue
+            if len(node.elts) < 2:
+                continue
+            if not all(
+                isinstance(e, ast.Constant)
+                and isinstance(e.value, str)
+                and e.value in _MESH_AXIS_NAMES
+                for e in node.elts
+            ):
+                continue
+            names = tuple(e.value for e in node.elts)  # type: ignore[union-attr]
+            out.append(LintViolation(
+                rule="mesh-axes-literal", path=rel, line=node.lineno,
+                message=(
+                    f"hard-coded mesh axis tuple {names} — mesh axis-name "
+                    "tuples live in launch/mesh.py (import REPLICA_AXES or "
+                    "use level_axes_for/partition_axes_for)"
+                ),
+            ))
     return out
 
 

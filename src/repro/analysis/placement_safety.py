@@ -20,6 +20,14 @@ and verifies:
   *at the same level* and vice versa, so a mispaired stage would transpose
   into communication on the wrong link — checking the pairing statically
   checks AD transposability ahead of ``jax.grad``;
+* **placement-kind agreement**: broadcast/reduce may only address a
+  *replica*-kind level and a stage transfer only a *stage*-kind level
+  (``placement/wrong-kind-comm``) — the abstract eval rejects these at
+  trace time, so a violation here means the plan was hand-assembled or
+  mutated; a ``Transfer`` additionally gets the operand-depth and
+  stage-tag pairing checks of the other comm stages (its AD transpose is
+  the reverse transfer at the SAME level, so the pairing check again
+  guards transposability);
 * **loop-carry stability**: a loop carry's body-output placement may not
   sit deeper on the lattice than its body-input placement (``build_plan``
   solves carries to a fixed point; instability here means the plan was
@@ -48,6 +56,7 @@ from repro.core.interpreter import (
     LoopStage,
     PlacementSet,
     Reduce,
+    Transfer,
     _contains_comm,
     _eqn_placement,
     _eqn_subjaxprs,
@@ -64,6 +73,16 @@ def check_placement_safety(plan) -> List[Finding]:
     findings: List[Finding] = []
     _check_plan(plan, "", findings)
     return findings
+
+
+def _eqn_kind(stage) -> str:
+    """Kind of the level a comm eqn addresses, from the eqn's own context
+    (covers derived stacks, whose names differ from the plan's)."""
+    pctx = stage.eqn.params.get("pctx")
+    if pctx is None:
+        return "replicas"
+    _, i = _eqn_placement(stage.eqn)
+    return getattr(pctx.placements[i], "kind", "replicas")
 
 
 def _check_plan(plan, prefix: str, findings: List[Finding]) -> None:
@@ -114,6 +133,14 @@ def _check_plan(plan, prefix: str, findings: List[Finding]) -> None:
             enames, i = _eqn_placement(stage.eqn)
             derived = enames != names
             in_pl = pl(stage.eqn.invars[0])
+            if _eqn_kind(stage) != "replicas":
+                findings.append(Finding(
+                    "placement/wrong-kind-comm", "error",
+                    f"broadcast@{enames[i]} addresses a stage-kind level: "
+                    f"pipeline stages communicate by stage_transfer, not "
+                    f"broadcast/reduce",
+                    stage=sname,
+                ))
             if derived:
                 if not regroup_reported:
                     regroup_reported = True
@@ -160,6 +187,14 @@ def _check_plan(plan, prefix: str, findings: List[Finding]) -> None:
             enames, i = _eqn_placement(stage.eqn)
             derived = enames != names
             in_pl = pl(stage.eqn.invars[0])
+            if _eqn_kind(stage) != "replicas":
+                findings.append(Finding(
+                    "placement/wrong-kind-comm", "error",
+                    f"{stage.op}@{enames[i]} addresses a stage-kind level: "
+                    f"pipeline stages communicate by stage_transfer, not "
+                    f"broadcast/reduce",
+                    stage=sname,
+                ))
             if derived:
                 if not regroup_reported:
                     regroup_reported = True
@@ -203,6 +238,36 @@ def _check_plan(plan, prefix: str, findings: List[Finding]) -> None:
             for o in stage.eqn.outvars:
                 if not _is_dropvar(o):
                     env[o] = enames[:i]
+        elif isinstance(stage, Transfer):
+            enames, i = _eqn_placement(stage.eqn)
+            in_pl = pl(stage.eqn.invars[0])
+            if _eqn_kind(stage) != "stages":
+                findings.append(Finding(
+                    "placement/wrong-kind-comm", "error",
+                    f"stage_transfer@{enames[i]} addresses a "
+                    f"replica-kind level: replicas communicate by "
+                    f"broadcast/reduce, not neighbor transfer",
+                    stage=sname,
+                ))
+            if enames == names and in_pl != enames[: i + 1]:
+                findings.append(Finding(
+                    "placement/transfer-operand", "warning",
+                    f"stage_transfer@{enames[i]} expects its operand at "
+                    f"{'/'.join(enames[: i + 1])}, lattice says "
+                    f"{'/'.join(in_pl) or 'server'}",
+                    stage=sname,
+                ))
+            if stage.placement != enames[i]:
+                findings.append(Finding(
+                    "placement/pairing", "error",
+                    f"Transfer stage tagged @{stage.placement} but its eqn "
+                    f"addresses level {enames[i]}; the AD transpose would "
+                    f"emit the reverse transfer at the wrong level",
+                    stage=sname,
+                ))
+            for o in stage.eqn.outvars:
+                if not _is_dropvar(o):
+                    env[o] = enames[: i + 1]
         elif isinstance(stage, LoopStage):
             _check_loop(plan, stage, idx, prefix, env, pl, findings)
         elif isinstance(stage, CondStage):

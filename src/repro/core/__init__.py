@@ -24,6 +24,8 @@ from .api import (
     reduce_mean,
     reduce_sum,
     reduce_weighted_mean,
+    stage_map,
+    stage_transfer,
     current_context,
 )
 from .hierarchical import (
@@ -38,6 +40,7 @@ from .interpreter import (
     LoopStage,
     MapReducePlan,
     Reduce,
+    Transfer,
     build_plan,
     count_primitives,
     run_plan,
@@ -51,6 +54,7 @@ from .primitives import (
     reduce_max_p,
     reduce_mean_p,
     reduce_sum_p,
+    stage_transfer_p,
 )
 from .sharding import constrain_partitioned, constrain_replicated, partition_spec
 
@@ -65,6 +69,8 @@ __all__ = [
     "reduce_mean",
     "reduce_sum",
     "reduce_weighted_mean",
+    "stage_map",
+    "stage_transfer",
     "current_context",
     "hierarchical_reduce_mean",
     "cross_pod_bytes",
@@ -75,6 +81,7 @@ __all__ = [
     "LocalCompute",
     "LoopStage",
     "CondStage",
+    "Transfer",
     "build_plan",
     "count_primitives",
     "run_plan",
@@ -88,6 +95,7 @@ __all__ = [
     "reduce_max_p",
     "reduce_mean_p",
     "reduce_sum_p",
+    "stage_transfer_p",
     "constrain_partitioned",
     "constrain_replicated",
     "partition_spec",

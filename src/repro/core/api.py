@@ -54,6 +54,8 @@ __all__ = [
     "reduce_max",
     "reduce_weighted_mean",
     "masked_reduce_mean",
+    "stage_transfer",
+    "stage_map",
     "partition_size",
     "current_context",
 ]
@@ -68,6 +70,7 @@ def program(
     partition_size: Optional[int] = None,
     placements: Optional[Mapping[str, int]] = None,
     partition_axes=None,
+    placement_kinds: Optional[Mapping[str, str]] = None,
     mesh: Optional[jax.sharding.Mesh] = None,
     use_sharding_annotations: bool = True,
     use_spmd_axis_name: bool = True,
@@ -84,6 +87,13 @@ def program(
     stack (e.g. ``{"pods": "pod", "clients": "data"}`` — pods over the DCN
     axis, clients over ICI). ``None`` means purely logical partitioning with
     no sharding constraints (fine on CPU / single device).
+
+    ``placement_kinds`` marks levels of the stack as pipeline *stages*
+    rather than replicas, e.g. ``placements={"stages": 4, "clients": 8},
+    placement_kinds={"stages": "stages"}``. Stage-kind levels communicate
+    via :func:`stage_transfer` / :func:`stage_map` instead of
+    broadcast/reduce. Unnamed levels default to ``"replicas"`` (today's
+    behavior, unchanged).
 
     ``use_sharding_annotations=False`` reproduces the paper's DrJAX-NS
     ablation (Fig. 6).
@@ -102,6 +112,7 @@ def program(
         partition_size,
         placements=placements,
         partition_axes=partition_axes,
+        placement_kinds=placement_kinds,
         mesh=mesh,
         use_sharding_annotations=use_sharding_annotations,
         use_spmd_axis_name=use_spmd_axis_name,
@@ -128,6 +139,18 @@ def _ctx() -> placement_lib.PlacementContext:
     return placement_lib.current_context()
 
 
+def _require_replica_stack(ctx: placement_lib.PlacementContext, op: str):
+    """Default-span collectives only make sense on an all-replica stack."""
+    stages = [n for n, k in zip(ctx.names, ctx.kinds) if k == "stages"]
+    if stages:
+        raise ValueError(
+            f"{op} with no placement= spans the whole stack, but level(s) "
+            f"{stages} are stage-kind (pipeline stages do not "
+            f"broadcast/reduce — use stage_transfer/stage_map). Address a "
+            f"replica-kind placement explicitly with placement=<name>."
+        )
+
+
 def broadcast(tree, placement: Optional[str] = None):
     """Replicate a structure to every group (paper §2, BB 1).
 
@@ -138,6 +161,7 @@ def broadcast(tree, placement: Optional[str] = None):
     """
     ctx = _ctx()
     if placement is None:
+        _require_replica_stack(ctx, "broadcast")
         chain = ctx.names  # outermost first: server -> ... -> innermost
     else:
         chain = (placement,)
@@ -153,6 +177,7 @@ def broadcast(tree, placement: Optional[str] = None):
 def _reduce_tree(tree, binder, placement: Optional[str]):
     ctx = _ctx()
     if placement is None:
+        _require_replica_stack(ctx, "reduce")
         chain = tuple(reversed(ctx.names))  # innermost first: -> server
     else:
         chain = (placement,)
@@ -206,6 +231,7 @@ def reduce_weighted_mean(tree, weights, placement: Optional[str] = None):
     ctx = _ctx()
     weights = jnp.asarray(weights)
     if placement is None:
+        _require_replica_stack(ctx, "reduce_weighted_mean")
         chain = tuple(reversed(ctx.names))
         depth_in, depth_out = ctx.depth, 0
     else:
@@ -354,6 +380,107 @@ def map_fn(fn: Callable, tree, placement: Optional[str] = None,
         )
     out = f(tree)
     return sharding_lib.constrain_tree(out, ctx, partitioned=True, depth=depth)
+
+
+# ---------------------------------------------------------------------------
+# pipeline-stage building blocks (stage-kind placements)
+# ---------------------------------------------------------------------------
+
+
+def _stage_placement_name(
+    ctx: placement_lib.PlacementContext, placement: Optional[str]
+) -> str:
+    """Resolve the addressed stage-kind placement (unique default)."""
+    if placement is not None:
+        pl = ctx.get(placement)
+        if pl.kind != "stages":
+            raise ValueError(
+                f"placement {placement!r} is {pl.kind!r}-kind, but this op "
+                "requires a stage-kind placement (declare it with "
+                "placement_kinds={" + f"{placement!r}: 'stages'" + "})."
+            )
+        return placement
+    stages = ctx.stage_names()
+    if not stages:
+        raise ValueError(
+            "no stage-kind placement in the ambient stack: declare one with "
+            "placement_kinds={<name>: 'stages'}."
+        )
+    if len(stages) > 1:
+        raise ValueError(
+            f"multiple stage-kind placements {stages}: address one "
+            "explicitly with placement=<name>."
+        )
+    return stages[0]
+
+
+def stage_transfer(tree, placement: Optional[str] = None, *,
+                   shift: int = 1, wrap: bool = False):
+    """Shift a stage-partitioned structure to neighboring stages.
+
+    ``out[..., j, ...] = x[..., j - shift, ...]`` along the addressed
+    stage-kind placement's group axis — stage ``j``'s activations move to
+    stage ``j + shift`` (the forward pipeline hand-off for ``shift=1``).
+    Vacated boundary stages receive zeros unless ``wrap=True`` (ring).
+    Linear, so the transpose is the reverse transfer (``-shift``): the
+    backward pipeline schedule falls out of AD. Lowers to a
+    collective-permute between stage shards when the stage level pins a
+    mesh axis.
+    """
+    ctx = _ctx()
+    name = _stage_placement_name(ctx, placement)
+    return jax.tree_util.tree_map(
+        lambda x: prims.bind_stage_transfer(
+            x, placement=name, shift=shift, wrap=wrap
+        ),
+        tree,
+    )
+
+
+def stage_map(fns, tree, placement: Optional[str] = None):
+    """Apply per-stage functions across a stage-partitioned structure.
+
+    ``fns`` is either one callable (applied at every stage — this is just
+    :func:`map_fn` over the stage placement) or a sequence with one callable
+    per stage (heterogeneous pipeline stages: stage ``s`` runs ``fns[s]`` on
+    its slice). As with :func:`map_fn`, a *tuple* ``tree`` passes its
+    elements as separate positional arguments. Results are re-stacked along
+    the stage axis and re-constrained to the stage level's sharding.
+    """
+    ctx = _ctx()
+    name = _stage_placement_name(ctx, placement)
+    if callable(fns):
+        return map_fn(fns, tree, placement=name)
+    fns = tuple(fns)
+    i = ctx.index_of(name)
+    size = ctx.get(name).size
+    if len(fns) != size:
+        raise ValueError(
+            f"stage_map: got {len(fns)} stage functions for placement "
+            f"{name!r} of {size} stages (pass one callable to apply it at "
+            "every stage)."
+        )
+
+    def run_stage(s: int):
+        fn = fns[s]
+        f = (lambda args: fn(*args)) if isinstance(tree, tuple) else fn
+        # Levels outside the stage axis stay mapped: wrap innermost first so
+        # the outermost placement's vmap is the outermost transform.
+        for lvl in range(i - 1, -1, -1):
+            f = jax.vmap(
+                f, in_axes=0, out_axes=0,
+                spmd_axis_name=ctx.spmd_axis_name_for(ctx.names[lvl]),
+            )
+        sliced = jax.tree_util.tree_map(
+            lambda x: x[(slice(None),) * i + (s,)], tree
+        )
+        return f(sliced)
+
+    outs = [run_stage(s) for s in range(size)]
+    out = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs, axis=i), *outs
+    )
+    return sharding_lib.constrain_tree(out, ctx, partitioned=True, depth=i + 1)
 
 
 def partition_size(placement: Optional[str] = None) -> int:

@@ -66,6 +66,7 @@ _COMM = {
     "drjax_reduce_sum": "reduce_sum",
     "drjax_reduce_mean": "reduce_mean",
     "drjax_reduce_max": "reduce_max",
+    "drjax_stage_transfer": "stage_transfer",
 }
 
 # A placement-set on the lattice: the stack prefix of placement names whose
@@ -83,16 +84,25 @@ def _join(a: PlacementSet, b: PlacementSet) -> PlacementSet:
     return a if len(a) >= len(b) else b
 
 
-def _normalize_placements(spec) -> Tuple[Tuple[str, int], ...]:
+def _normalize_placements(spec) -> Tuple[Tuple[str, int, str], ...]:
     """Accept an int (one "clients" placement), an ordered mapping
-    name -> size, a PlacementContext, or a (name, size) sequence."""
+    name -> size, a PlacementContext, or a (name, size[, kind]) sequence.
+    Returns (name, size, kind) triples, kind defaulting to "replicas"."""
     if isinstance(spec, (int, np.integer)):
-        return (("clients", int(spec)),)
+        return (("clients", int(spec), "replicas"),)
     if hasattr(spec, "placements"):  # PlacementContext
-        return tuple((p.name, p.size) for p in spec.placements)
+        return tuple(
+            (p.name, p.size, getattr(p, "kind", "replicas"))
+            for p in spec.placements
+        )
     if isinstance(spec, Mapping):
-        return tuple((str(n), int(s)) for n, s in spec.items())
-    return tuple((str(n), int(s)) for n, s in spec)
+        return tuple((str(n), int(s), "replicas") for n, s in spec.items())
+    out = []
+    for entry in spec:
+        entry = tuple(entry)
+        kind = str(entry[2]) if len(entry) > 2 else "replicas"
+        out.append((str(entry[0]), int(entry[1]), kind))
+    return tuple(out)
 
 
 def _eqn_placement(eqn) -> Tuple[Tuple[str, ...], int]:
@@ -233,6 +243,23 @@ class Reduce(Stage):
 
 
 @dataclasses.dataclass
+class Transfer(Stage):
+    """``stage_transfer@placement``: neighbor exchange along a stage level.
+
+    ``placement`` is the addressed stage-kind placement. Each stage ships
+    its slice ``shift`` neighbors down the pipeline (ICI traffic between
+    adjacent stage shards); boundary slots are zero-filled unless ``wrap``.
+    Unlike Broadcast/Reduce this stage does not move on the lattice: operand
+    and result are both partitioned at the stage level's depth."""
+
+    eqn: Any = None
+    kind: str = "TRANSFER"
+    placement: str = "stages"
+    shift: int = 1
+    wrap: bool = False
+
+
+@dataclasses.dataclass
 class LoopStage(Stage):
     """A scan/while whose body communicates: a sub-plan run per iteration.
 
@@ -272,6 +299,10 @@ class MapReducePlan:
     partitioned_outvars: Tuple[int, ...] = ()
     # The plan's placement stack, outermost first.
     placements: Tuple[Tuple[str, int], ...] = ()
+    # Kind per placement level ("replicas" | "stages"), parallel to
+    # ``placements`` (kept separate so legacy (name, size) consumers and
+    # fingerprints of kind-free plans are untouched).
+    placement_kinds: Tuple[str, ...] = ()
     # Full placement-sets (name prefixes) per invar/outvar.
     invar_placements: Tuple[PlacementSet, ...] = ()
     outvar_placements: Tuple[PlacementSet, ...] = ()
@@ -286,6 +317,8 @@ class MapReducePlan:
             self.out_atoms = tuple(self.jaxpr.jaxpr.outvars)
         if not self.placements:
             self.placements = (("clients", self.partition_size),)
+        if not self.placement_kinds:
+            self.placement_kinds = tuple("replicas" for _ in self.placements)
         if not self.invar_placements:
             names = tuple(n for n, _ in self.placements)
             self.invar_placements = tuple(
@@ -429,10 +462,13 @@ class MapReducePlan:
 
     def to_text(self) -> str:
         pp = _VarNamer()
-        if len(self.placements) > 1:
+        if len(self.placements) > 1 or "stages" in self.placement_kinds:
             header = (
                 "MapReducePlan(placements="
-                + "/".join(f"{n}:{s}" for n, s in self.placements)
+                + "/".join(
+                    f"{n}:{s}" + ("[stages]" if k == "stages" else "")
+                    for (n, s), k in zip(self.placements, self.placement_kinds)
+                )
                 + ")"
             )
         else:
@@ -521,7 +557,7 @@ class MapReducePlan:
     def communication_stages(self, recursive: bool = False) -> List[Stage]:
         out = []
         for name, s, _ in self.named_stages():
-            if isinstance(s, (Broadcast, Reduce)):
+            if isinstance(s, (Broadcast, Reduce, Transfer)):
                 if recursive or "_" not in name[len("stage_"):]:
                     out.append(s)
         return out
@@ -660,6 +696,12 @@ def _stage_text_lines(
                 f"{pad}stage {i}: {s.op.upper()} {route} @{s.placement} "
                 f"({pp(s.eqn.invars[0])} -> {pp(s.eqn.outvars[0])})"
             )
+        elif isinstance(s, Transfer):
+            shift = f"{s.shift:+d}" + (" wrap" if s.wrap else "")
+            lines.append(
+                f"{pad}stage {i}: TRANSFER shift={shift} @{s.placement} "
+                f"({pp(s.eqn.invars[0])} -> {pp(s.eqn.outvars[0])})"
+            )
         elif isinstance(s, LoopStage):
             trip = "?" if s.trip_count is None else str(s.trip_count)
             lines.append(
@@ -721,7 +763,9 @@ def build_plan(
     sizes matching its leading dims — right for all examples here, but
     callers with ambiguous shapes should pass it explicitly.
     """
-    placements = _normalize_placements(partition_size)
+    triples = _normalize_placements(partition_size)
+    placements = tuple((n, s) for n, s, _ in triples)
+    kinds = tuple(k for _, _, k in triples)
     names = tuple(n for n, _ in placements)
     sizes = tuple(s for _, s in placements)
     total = math.prod(sizes)
@@ -821,7 +865,7 @@ def build_plan(
         body_plan = None
         for _ in range(ncar + 1):
             body_plan = build_plan(
-                body, placements,
+                body, triples,
                 partitioned_invars=consts_p + carry_p + xs_p,
             )
             out_p = list(body_plan.outvar_placements[:ncar])
@@ -859,7 +903,7 @@ def build_plan(
         body_plan = None
         for _ in range(len(carry_p) + 1):
             body_plan = build_plan(
-                body, placements,
+                body, triples,
                 partitioned_invars=body_consts_p + carry_p,
             )
             out_p = list(body_plan.outvar_placements)
@@ -870,7 +914,7 @@ def build_plan(
         # The predicate runs once per iteration too: plan it so communication
         # inside the cond (adaptive stopping) shows up as explicit stages.
         cond_plan = build_plan(
-            params["cond_jaxpr"], placements,
+            params["cond_jaxpr"], triples,
             partitioned_invars=cond_consts_p + carry_p,
         )
         stages.append(
@@ -890,7 +934,7 @@ def build_plan(
         branches = eqn.params["branches"]
         ops_p = [is_part(a) for a in eqn.invars[1:]]
         branch_plans = [
-            build_plan(b, placements, partitioned_invars=ops_p)
+            build_plan(b, triples, partitioned_invars=ops_p)
             for b in branches
         ]
         stages.append(
@@ -930,6 +974,22 @@ def build_plan(
                         source=enames[i - 1] if i > 0 else "server",
                     )
                 )
+                for o in eqn.outvars:
+                    if not _is_dropvar(o):
+                        placed[o] = enames[: i + 1]
+            elif name == "drjax_stage_transfer":
+                enames, i = _eqn_placement(eqn)
+                stages.append(
+                    Transfer(
+                        eqn=_rewrite_eqn(eqn, resolve),
+                        placement=enames[i],
+                        shift=int(eqn.params.get("shift", 1)),
+                        wrap=bool(eqn.params.get("wrap", False)),
+                    )
+                )
+                # No lattice movement: a transfer permutes values among the
+                # stage groups, so the result stays at the stage level's
+                # depth (i + 1 leading group axes).
                 for o in eqn.outvars:
                     if not _is_dropvar(o):
                         placed[o] = enames[: i + 1]
@@ -990,6 +1050,7 @@ def build_plan(
         partitioned_invars=tuple(len(p) for p in invar_placements),
         partitioned_outvars=tuple(len(p) for p in outvar_placements),
         placements=placements,
+        placement_kinds=kinds,
         invar_placements=invar_placements,
         outvar_placements=outvar_placements,
         extra_consts=extra_consts,
@@ -1048,7 +1109,7 @@ def _execute_plan(plan: MapReducePlan, args: List[Any]) -> List[Any]:
         write(v, val)
 
     for stage in plan.stages:
-        if isinstance(stage, (Broadcast, Reduce)):
+        if isinstance(stage, (Broadcast, Reduce, Transfer)):
             eqn = stage.eqn
             for o, val in zip(eqn.outvars, _eval_eqn(eqn, read)):
                 write(o, val)
@@ -1193,6 +1254,17 @@ def _unkey(rows, shape):
   # axes restored (row-major over the sorted key tuples).
   arr = np.stack([v for _, v in sorted(rows)])
   return arr.reshape(tuple(shape) + arr.shape[1:])
+
+
+def _stage_shift(v, axis, shift, wrap):
+  # stage_transfer on a stacked (non-keyed) value: roll the stage axis,
+  # zero-filling the slots the shift vacated unless wrapping.
+  out = np.roll(np.asarray(v), shift, axis=axis)
+  if not wrap and shift != 0:
+    idx = [slice(None)] * out.ndim
+    idx[axis] = slice(0, shift) if shift > 0 else slice(shift, None)
+    out[tuple(idx)] = 0
+  return out
 """
 
 
@@ -1409,6 +1481,8 @@ class _BeamEmitter:
                 self.emit_broadcast(stage, plan)
             elif isinstance(stage, Reduce):
                 self.emit_reduce(stage, plan)
+            elif isinstance(stage, Transfer):
+                self.emit_transfer(stage, plan)
             elif isinstance(stage, LocalCompute):
                 self.emit_local(stage, plan, sname, outs)
             elif isinstance(stage, LoopStage):
@@ -1534,6 +1608,95 @@ class _BeamEmitter:
                 out, f"{combiner}(list({src}))", "plain",
                 f"{stage.op.upper()} over a stacked local value",
             )
+        self.bind(stage.eqn.outvars[0], out)
+
+    def emit_transfer(self, stage: Transfer, plan):
+        src = self.name_of(stage.eqn.invars[0], plan)
+        out = self.fresh("tx")
+        i, size = self._stage_placement(stage)
+        shift, wrap = stage.shift, stage.wrap
+        kind = self.kinds.get(src, "plain")
+        tag = f"TRANSFER shift={shift:+d} @{stage.placement}"
+        if kind not in ("group",):
+            # Stacked driver/server value: the shift is a local permutation.
+            if kind == "server":
+                self.assign(
+                    out,
+                    f"{src} | {self.label()} >> beam.Map("
+                    f"lambda v: _stage_shift(v, {i}, {shift}, {wrap}))",
+                    "server", tag,
+                )
+            else:
+                self.assign(
+                    out, f"_stage_shift({src}, {i}, {shift}, {wrap})",
+                    "plain", tag,
+                )
+            self.bind(stage.eqn.outvars[0], out)
+            return
+        depth = self.depths.get(src, 1)
+        tuple_keys = self.nested or depth > 1
+        if tuple_keys:
+            rekey = (
+                f"lambda kv: (kv[0][:{i}] + ((kv[0][{i}] + {shift})"
+                + (f" % {size}" if wrap else "")
+                + f",) + kv[0][{i + 1}:], kv[1])"
+            )
+            in_range = f"lambda kv: 0 <= kv[0][{i}] < {size}"
+        else:
+            rekey = (
+                f"lambda kv: ((kv[0] + {shift})"
+                + (f" % {size}" if wrap else "")
+                + ", kv[1])"
+            )
+            in_range = f"lambda kv: 0 <= kv[0] < {size}"
+        if wrap:
+            self.assign(
+                out,
+                f"{src} | {self.label()} >> beam.Map({rekey})",
+                "group", f"{tag} (rotate stage keys)",
+            )
+        else:
+            # Re-key each element to its destination stage, dropping the
+            # ones that fall off the pipeline edge, and inject zero elements
+            # for the vacated entry stages.
+            moved = self.fresh("mv")
+            self.assign(
+                moved,
+                f"{src} | {self.label()} >> beam.Map({rekey}) "
+                f"| {self.label()} >> beam.Filter({in_range})",
+                "group", f"{tag} (shift stage keys)",
+            )
+            aval = stage.eqn.outvars[0].aval
+            elem_shape = tuple(aval.shape[depth:])
+            zeros_expr = (
+                f"np.zeros({elem_shape!r}, np.dtype({str(aval.dtype)!r}))"
+            )
+            if shift > 0:
+                vac = f"range({min(shift, size)})"
+            else:
+                vac = f"range({max(size + shift, 0)}, {size})"
+            if tuple_keys:
+                sizes = tuple(self.plan.placement_sizes[:depth])
+                keys = (
+                    f"[k0 + (j,) + k1 for k0 in np.ndindex(*{sizes[:i]!r}) "
+                    f"for j in {vac} "
+                    f"for k1 in np.ndindex(*{sizes[i + 1:]!r})]"
+                )
+            else:
+                keys = f"[j for j in {vac}]"
+            zeros = self.fresh("zf")
+            self.assign(
+                zeros,
+                f"p | {self.label()} >> beam.Create("
+                f"[(k, {zeros_expr}) for k in {keys}])",
+                "group", f"{tag} (zero-fill vacated stages)",
+            )
+            self.assign(
+                out,
+                f"({moved}, {zeros}) | {self.label()} >> beam.Flatten()",
+                "group", tag,
+            )
+        self.depths[out] = depth
         self.bind(stage.eqn.outvars[0], out)
 
     def emit_local(self, stage: LocalCompute, plan, sname: str, outs):

@@ -36,6 +36,12 @@ import jax
 
 AxisSpec = Union[str, Tuple[str, ...], None]
 
+#: Valid placement kinds. ``"replicas"`` is the paper's data-replica group
+#: (broadcast/reduce communicate across it); ``"stages"`` marks the level as
+#: model pipeline stages (JaxPP-style MPMD), which communicate only through
+#: neighbor ``stage_transfer`` exchange and per-stage ``stage_map``.
+PLACEMENT_KINDS = ("replicas", "stages")
+
 
 def _axes_tuple(axes: AxisSpec) -> Tuple[str, ...]:
     if axes is None:
@@ -55,16 +61,28 @@ class Placement:
       axes: mesh axis name(s) this level's group axis is sharded over, e.g.
         ``"data"`` or ``("pod", "data")``. ``None`` means no sharding
         constraint for this level (purely logical).
+      kind: what the groups at this level *are*. ``"replicas"`` (default,
+        today's behavior unchanged) — data-parallel replica groups addressed
+        by broadcast/reduce. ``"stages"`` — model pipeline stages: replica
+        collectives are rejected at this level; stages exchange values with
+        ``stage_transfer`` (ppermute-style neighbor traffic) and run
+        per-stage functions via ``stage_map``.
     """
 
     name: str
     size: int
     axes: AxisSpec = None
+    kind: str = "replicas"
 
     def __post_init__(self):
         if self.size < 1:
             raise ValueError(
                 f"placement {self.name!r} must have size >= 1, got {self.size}"
+            )
+        if self.kind not in PLACEMENT_KINDS:
+            raise ValueError(
+                f"placement {self.name!r} has unknown kind {self.kind!r}; "
+                f"valid kinds are {list(PLACEMENT_KINDS)}"
             )
 
     def axes_tuple(self) -> Tuple[str, ...]:
@@ -113,6 +131,14 @@ class PlacementContext:
     @property
     def sizes(self) -> Tuple[int, ...]:
         return tuple(p.size for p in self.placements)
+
+    @property
+    def kinds(self) -> Tuple[str, ...]:
+        return tuple(p.kind for p in self.placements)
+
+    def stage_names(self) -> Tuple[str, ...]:
+        """Names of the stage-kind levels, outermost first."""
+        return tuple(p.name for p in self.placements if p.kind == "stages")
 
     @property
     def innermost(self) -> Placement:
@@ -231,6 +257,7 @@ def make_context(
     placement: str = "clients",
     placements: Optional[Mapping[str, int]] = None,
     partition_axes=None,
+    placement_kinds: Optional[Mapping[str, str]] = None,
     mesh: Optional[jax.sharding.Mesh] = None,
     use_sharding_annotations: bool = True,
     use_spmd_axis_name: bool = True,
@@ -240,6 +267,8 @@ def make_context(
     ``make_context(n)`` — the paper's single placement of size n.
     ``make_context(placements={"pods": P, "clients": m})`` — a nested stack,
     outermost first (mapping order is the stack order).
+    ``placement_kinds`` optionally maps placement names to a kind
+    (``"replicas"`` — the default — or ``"stages"`` for pipeline stages).
     """
     if placements is not None:
         if partition_size is not None:
@@ -257,8 +286,16 @@ def make_context(
             )
         names, sizes = (placement,), (partition_size,)
     axes = _normalize_axes(names, partition_axes)
+    kinds_map = dict(placement_kinds or {})
+    unknown_kinds = set(kinds_map) - set(names)
+    if unknown_kinds:
+        raise ValueError(
+            f"placement_kinds names unknown placements "
+            f"{sorted(unknown_kinds)}; placements are {list(names)}"
+        )
     stack = tuple(
-        Placement(n, s, a) for n, s, a in zip(names, sizes, axes)
+        Placement(n, s, a, kind=kinds_map.get(n, "replicas"))
+        for n, s, a in zip(names, sizes, axes)
     )
     return PlacementContext(
         placements=stack,

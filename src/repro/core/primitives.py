@@ -53,10 +53,12 @@ __all__ = [
     "reduce_sum_p",
     "reduce_mean_p",
     "reduce_max_p",
+    "stage_transfer_p",
     "bind_broadcast",
     "bind_reduce_sum",
     "bind_reduce_mean",
     "bind_reduce_max",
+    "bind_stage_transfer",
     "DRJAX_PRIMITIVES",
     "COMMUNICATION_PRIMITIVES",
 ]
@@ -98,6 +100,19 @@ def _check_operand_depth(
             )
 
 
+def _check_kind(pl: placement_lib.Placement, prim: str, expect: str):
+    """Replica collectives only address replica-kind placements; transfer
+    only stage-kind ones (wrong-kind communication, rejected at trace time)."""
+    if pl.kind != expect:
+        other = ("stage_transfer/stage_map" if expect == "replicas"
+                 else "broadcast/reduce")
+        raise ValueError(
+            f"drjax.{prim} cannot address placement '{pl.name}' of kind "
+            f"'{pl.kind}' (expects a '{expect}'-kind placement; "
+            f"'{pl.kind}' levels communicate via {other})."
+        )
+
+
 # ---------------------------------------------------------------------------
 # broadcast
 # ---------------------------------------------------------------------------
@@ -109,6 +124,7 @@ def _broadcast_impl(
     x, *, pctx: placement_lib.PlacementContext, placement: Optional[str] = None
 ):
     pl, i = _resolve(pctx, placement)
+    _check_kind(pl, "broadcast", "replicas")  # eager binds skip abstract
     out = jnp.broadcast_to(
         jnp.expand_dims(x, i), x.shape[:i] + (pl.size,) + x.shape[i:]
     )
@@ -117,6 +133,7 @@ def _broadcast_impl(
 
 def _broadcast_abstract(x, *, pctx, placement=None):
     pl, i = _resolve(pctx, placement)
+    _check_kind(pl, "broadcast", "replicas")
     _check_operand_depth(x, pctx, i, "broadcast")
     return core.ShapedArray(
         x.shape[:i] + (pl.size,) + x.shape[i:], x.dtype
@@ -193,6 +210,7 @@ def _make_reduction(name: str, reduce_fn):
     def impl(x, *, pctx: placement_lib.PlacementContext, placement=None,
              compress=None, qaxis=-1):
         pl, i = _resolve(pctx, placement)
+        _check_kind(pl, name, "replicas")  # eager binds skip abstract
         if compress is not None:
             out = _fused_compress_reduce(x, i, name, compress, qaxis)
         else:
@@ -202,7 +220,8 @@ def _make_reduction(name: str, reduce_fn):
         return sharding_lib.constrain_partitioned(out, pctx, depth=i)
 
     def abstract(x, *, pctx, placement=None, compress=None, qaxis=-1):
-        _, i = _resolve(pctx, placement)
+        pl, i = _resolve(pctx, placement)
+        _check_kind(pl, name, "replicas")
         _check_operand_depth(x, pctx, i + 1, name)
         return core.ShapedArray(x.shape[:i] + x.shape[i + 1 :], x.dtype)
 
@@ -310,6 +329,107 @@ ad.primitive_jvps[reduce_max_p] = _reduce_max_jvp
 
 
 # ---------------------------------------------------------------------------
+# stage_transfer (stage-kind placements: pipeline neighbor exchange)
+# ---------------------------------------------------------------------------
+
+stage_transfer_p = Primitive("drjax_stage_transfer")
+
+
+def _stage_transfer_impl(
+    x, *, pctx: placement_lib.PlacementContext, placement=None,
+    shift: int = 1, wrap: bool = False,
+):
+    pl, i = _resolve(pctx, placement)
+    _check_kind(pl, "stage_transfer", "stages")  # eager binds skip abstract
+    # out[..., s, ...] = x[..., s - shift, ...]: every stage ships its slice
+    # to its (shift)-th neighbor. With wrap=False the boundary slots are
+    # zero-filled — the linear map whose transpose is the reverse shift, so
+    # MapReduce AD yields the backward pipeline for free. Under a mesh the
+    # depth-(i+1) constraint keeps the stage axis pinned, and GSPMD lowers
+    # the shift to a collective-permute (ppermute-style) neighbor exchange.
+    out = jnp.roll(x, shift, axis=i)
+    if not wrap:
+        src = jnp.arange(pl.size) - shift
+        valid = (src >= 0) & (src < pl.size)
+        valid = valid.reshape(
+            (1,) * i + (pl.size,) + (1,) * (x.ndim - i - 1)
+        )
+        out = jnp.where(valid, out, jnp.zeros_like(out))
+    return sharding_lib.constrain_partitioned(out, pctx, depth=i + 1)
+
+
+def _stage_transfer_abstract(x, *, pctx, placement=None, shift=1, wrap=False):
+    pl, i = _resolve(pctx, placement)
+    _check_kind(pl, "stage_transfer", "stages")
+    _check_operand_depth(x, pctx, i + 1, "stage_transfer")
+    return core.ShapedArray(x.shape, x.dtype)
+
+
+stage_transfer_p.def_impl(_stage_transfer_impl)
+stage_transfer_p.def_abstract_eval(_stage_transfer_abstract)
+mlir.register_lowering(
+    stage_transfer_p,
+    mlir.lower_fun(_stage_transfer_impl, multiple_results=False),
+)
+
+
+def _stage_transfer_jvp(primals, tangents, *, pctx, placement=None,
+                        shift=1, wrap=False):
+    (x,), (t,) = primals, tangents
+    out = stage_transfer_p.bind(
+        x, pctx=pctx, placement=placement, shift=shift, wrap=wrap
+    )
+    if isinstance(t, ad.Zero):
+        t_out = ad.Zero(core.get_aval(out).to_tangent_aval())
+    else:
+        t_out = stage_transfer_p.bind(
+            t, pctx=pctx, placement=placement, shift=shift, wrap=wrap
+        )
+    return out, t_out
+
+
+ad.primitive_jvps[stage_transfer_p] = _stage_transfer_jvp
+
+
+def _stage_transfer_transpose(ct, x, *, pctx, placement=None, shift=1,
+                              wrap=False):
+    # d(transfer shift)^T = transfer -shift: cotangents flow stage s+shift
+    # -> stage s, the backward pipeline's reverse neighbor exchange (with
+    # wrap, the reverse rotation).
+    if isinstance(ct, ad.Zero):
+        return (ad.Zero(x.aval),)
+    return (
+        stage_transfer_p.bind(
+            ct, pctx=pctx, placement=placement, shift=-shift, wrap=wrap
+        ),
+    )
+
+
+ad.primitive_transposes[stage_transfer_p] = _stage_transfer_transpose
+
+
+def _stage_transfer_batch(args, dims, *, pctx, placement=None, shift=1,
+                          wrap=False):
+    (x,), (d,) = args, dims
+    if d is batching.not_mapped:
+        return (
+            stage_transfer_p.bind(
+                x, pctx=pctx, placement=placement, shift=shift, wrap=wrap
+            ),
+            d,
+        )
+    # Batch axis to the end so the placement-prefix axes stay leading.
+    x = jnp.moveaxis(x, d, x.ndim - 1)
+    out = stage_transfer_p.bind(
+        x, pctx=pctx, placement=placement, shift=shift, wrap=wrap
+    )
+    return out, out.ndim - 1
+
+
+batching.primitive_batchers[stage_transfer_p] = _stage_transfer_batch
+
+
+# ---------------------------------------------------------------------------
 # user-facing single-leaf binders (one primitive at one placement)
 # ---------------------------------------------------------------------------
 
@@ -352,11 +472,20 @@ def bind_reduce_max(x, placement: Optional[str] = None):
     return reduce_max_p.bind(x, **_bind_params(placement))
 
 
+def bind_stage_transfer(x, placement: Optional[str] = None, *,
+                        shift: int = 1, wrap: bool = False):
+    x = jnp.asarray(x)
+    return stage_transfer_p.bind(
+        x, shift=int(shift), wrap=bool(wrap), **_bind_params(placement)
+    )
+
+
 DRJAX_PRIMITIVES: Tuple[Primitive, ...] = (
     broadcast_p,
     reduce_sum_p,
     reduce_mean_p,
     reduce_max_p,
+    stage_transfer_p,
 )
 
 # Primitives that imply cross-group communication when interpreted onto a

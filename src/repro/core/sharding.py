@@ -13,6 +13,13 @@ over the slow DCN ``"pod"`` axis while the clients axis shards over ICI
 propagate model-parallel shardings from the parameters through the mapped
 computation (the paper's composition of partition-, model- and
 within-partition parallelism).
+
+Placement *kinds* change nothing here: a stage-kind level pins its group
+axis onto its own mesh axes (conventionally ``"stage"``) exactly like a
+replica level, which is what makes ``stage_transfer``'s shifted write lower
+to a collective-permute between stage shards rather than a data reshuffle —
+the per-stage sharding constraints of the 1F1B schedule are just
+``constrain_partitioned(..., depth=i+1)`` at the stage level's depth.
 """
 
 from __future__ import annotations

@@ -1,11 +1,13 @@
-"""BENCH_hier.json trajectory writer (one owner for the merge rule).
+"""BENCH_<name>.json trajectory writer (one owner for the merge rule).
 
-The trajectory keeps one entry per git SHA; several writers contribute keys
-to the SAME entry — ``benchmarks/hier_reduce.py`` ("points"),
+Each trajectory file keeps one entry per git SHA; several writers may
+contribute keys to the SAME entry — for ``BENCH_hier.json`` (the default
+``name="hier"``): ``benchmarks/hier_reduce.py`` ("points"),
 ``benchmarks/executor.py`` ("executor"), the dry-run driver's
 ``--hier-sweep`` ("sharded") — so the merge must update in place and never
-clobber another writer's measurements. Import-safe: no JAX, no env
-mutation.
+clobber another writer's measurements. ``benchmarks/pipeline.py`` writes
+its own ``BENCH_pipeline.json`` via ``name="pipeline"``. Import-safe: no
+JAX, no env mutation.
 """
 
 from __future__ import annotations
@@ -23,8 +25,8 @@ def repo_root() -> str:
     )
 
 
-def bench_path() -> str:
-    return os.path.join(repo_root(), "BENCH_hier.json")
+def bench_path(name: str = "hier") -> str:
+    return os.path.join(repo_root(), f"BENCH_{name}.json")
 
 
 def git_sha() -> str:
@@ -47,16 +49,19 @@ def _load(path: str) -> dict:
         return {}
 
 
-def merge_entry(updates: dict, *, top_points: Optional[list] = None) -> str:
+def merge_entry(updates: dict, *, top_points: Optional[list] = None,
+                name: str = "hier") -> str:
     """Merge ``updates`` into the current SHA's trajectory entry.
 
     Only the caller's keys are replaced; everything else in the entry (and
     every other SHA's entry) survives. ``top_points`` additionally mirrors
     the latest wall-clock points under the top-level ``"points"`` key for
     quick reading (hier_reduce's historical schema). A pre-trajectory file
-    (bare ``{"points": ...}``) is kept as the seed entry.
+    (bare ``{"points": ...}``) is kept as the seed entry. ``name`` selects
+    the trajectory file (``BENCH_<name>.json``, default the historical
+    ``hier``).
     """
-    path = bench_path()
+    path = bench_path(name)
     data = _load(path)
     trajectory = list(data.get("trajectory", []))
     if not trajectory and "points" in data:

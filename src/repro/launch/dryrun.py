@@ -241,7 +241,7 @@ def run_hier_sweep(num_pods: int = 2, iters: int = 20, reps: int = 3) -> dict:
     devices = jax.devices()[: min(8, len(jax.devices()))]
     data_par = len(devices) // num_pods
     mesh = compat.make_mesh(
-        (num_pods, data_par), ("pod", "data"),
+        (num_pods, data_par), mesh_lib.REPLICA_AXES,
         devices=devices[: num_pods * data_par],
     )
     clients_per_pod = data_par * 4  # several groups per device (weak scaling)
@@ -249,7 +249,8 @@ def run_hier_sweep(num_pods: int = 2, iters: int = 20, reps: int = 3) -> dict:
     d = 1 << 12
     paxes = {"pods": "pod", "clients": "data"}
 
-    @drjax.program(partition_size=n, partition_axes=("pod", "data"), mesh=mesh)
+    @drjax.program(partition_size=n, partition_axes=mesh_lib.REPLICA_AXES,
+                   mesh=mesh)
     def flat(xs):
         return drjax.reduce_mean(xs)
 
@@ -268,11 +269,11 @@ def run_hier_sweep(num_pods: int = 2, iters: int = 20, reps: int = 3) -> dict:
     key = jax.random.PRNGKey(0)
     xs_flat = jax.device_put(
         jax.random.normal(key, (n, d), jnp.float32),
-        compat.named_sharding(mesh, P(("pod", "data"), None)),
+        compat.named_sharding(mesh, P(mesh_lib.REPLICA_AXES, None)),
     )
     xs_nested = jax.device_put(
         jax.random.normal(key, (num_pods, clients_per_pod, d), jnp.float32),
-        compat.named_sharding(mesh, P("pod", "data", None)),
+        compat.named_sharding(mesh, P(*mesh_lib.REPLICA_AXES, None)),
     )
     fns = [(jax.jit(flat), xs_flat),  # no-donate: bench re-reads its inputs
            (jax.jit(hier), xs_nested),  # no-donate: bench re-reads its inputs

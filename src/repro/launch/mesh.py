@@ -17,6 +17,68 @@ import jax
 
 from repro import compat
 
+# Canonical replica axes of the production mesh, outermost first. This module
+# is the single home for mesh axis-name tuples — everywhere else imports
+# these (enforced by the ``mesh-axes-literal`` lint rule).
+REPLICA_AXES = ("pod", "data")
+
+# Mesh axis name per *replica* placement level, innermost-first: the
+# innermost level always owns "data" (fast ICI), its parent "pod" (DCN), a
+# grandparent "superpod". Deeper stacks get generated "repl<depth>" names.
+_REPLICA_LEVEL_AXES = ("data", "pod", "superpod")
+
+
+def _normalize_stack(placements) -> Tuple[Tuple[str, int, str], ...]:
+    """Any placement-stack spec -> ((name, size, kind), ...), outermost first.
+
+    Accepts a ``Mapping[name, size]`` (all levels replica-kind), a
+    ``PlacementContext``, or a sequence of ``Placement``s / ``(name, size[,
+    kind])`` tuples."""
+    if hasattr(placements, "placements"):  # PlacementContext
+        placements = placements.placements
+    if isinstance(placements, Mapping):
+        return tuple(
+            (str(n), int(s), "replicas") for n, s in placements.items()
+        )
+    out = []
+    for p in placements:
+        if hasattr(p, "name"):  # Placement
+            out.append((p.name, p.size, getattr(p, "kind", "replicas")))
+        else:
+            entry = tuple(p)
+            kind = str(entry[2]) if len(entry) > 2 else "replicas"
+            out.append((str(entry[0]), int(entry[1]), kind))
+    return tuple(out)
+
+
+def level_axes_for(placements) -> Tuple[str, ...]:
+    """Mesh axis name for each placement level, outermost first.
+
+    Replica levels factorize innermost-out over ``(data, pod, superpod,
+    repl4, ...)`` — so a flat stack gets ``("data",)``, a 2-level stack
+    ``("pod", "data")`` (byte-identical to the historical hard-coded pair),
+    and a 3-level stack ``("superpod", "pod", "data")``. Stage-kind levels
+    get the ``"stage"`` axis (then ``"stage2"``, ...), independent of the
+    replica numbering, e.g. ``(stage, data)`` for a pipeline over
+    data-parallel replicas."""
+    stack = _normalize_stack(placements)
+    n_replica = sum(1 for _, _, k in stack if k != "stages")
+    axes = []
+    replica_seen = 0
+    stage_seen = 0
+    for _name, _size, kind in stack:
+        if kind == "stages":
+            axes.append("stage" if stage_seen == 0 else f"stage{stage_seen + 1}")
+            stage_seen += 1
+        else:
+            depth_from_inner = n_replica - 1 - replica_seen
+            if depth_from_inner < len(_REPLICA_LEVEL_AXES):
+                axes.append(_REPLICA_LEVEL_AXES[depth_from_inner])
+            else:
+                axes.append(f"repl{depth_from_inner + 1}")
+            replica_seen += 1
+    return tuple(axes)
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16×16 single-pod (data, model) or 2×16×16 (pod, data, model)."""
@@ -39,12 +101,16 @@ def make_host_mesh(model_parallel: int = 1) -> Optional[jax.sharding.Mesh]:
 
 
 def partition_axes_for(mesh: Optional[jax.sharding.Mesh]):
-    """DrJAX partition axes on this mesh: ("pod", "data") when pods exist."""
+    """DrJAX partition axes on this mesh: ("pod", "data") when pods exist
+    (prefixed with "superpod" on a 3-level mesh)."""
     if mesh is None:
         return None
     names = mesh.axis_names
     if "pod" in names:
-        return ("pod", "data")
+        axes = REPLICA_AXES
+        if "superpod" in names:
+            axes = ("superpod",) + axes
+        return axes
     if "data" in names:
         return "data"
     return None
@@ -52,48 +118,54 @@ def partition_axes_for(mesh: Optional[jax.sharding.Mesh]):
 
 def placement_axes_for(
     mesh: Optional[jax.sharding.Mesh],
+    placements=None,
 ) -> Optional[Dict[str, str]]:
-    """Per-placement mesh axes for a nested {"pods", "clients"} stack.
+    """Per-placement mesh axes for a placement stack on this mesh.
 
-    Pods pin the slow DCN ``"pod"`` axis, clients the ICI ``"data"`` axis —
+    Without ``placements`` (legacy): the nested {"pods", "clients"} stack —
+    pods pin the slow DCN ``"pod"`` axis, clients the ICI ``"data"`` axis,
     the assignment that makes the two legs of a hierarchical reduction land
     on the interconnects they were designed for. Degrades gracefully: a
-    single-pod mesh leaves pods logical (no pod axis to pin)."""
+    single-pod mesh leaves pods logical (no pod axis to pin).
+
+    With ``placements`` (any spec ``_normalize_stack`` accepts): the N-level
+    generalization — each level is assigned its :func:`level_axes_for` axis,
+    dropping levels whose axis the mesh does not carry."""
     if mesh is None:
         return None
     names = mesh.axis_names
-    axes: Dict[str, str] = {}
-    if "pod" in names:
-        axes["pods"] = "pod"
-    if "data" in names:
-        axes["clients"] = "data"
+    if placements is None:
+        axes: Dict[str, str] = {}
+        if "pod" in names:
+            axes["pods"] = "pod"
+        if "data" in names:
+            axes["clients"] = "data"
+        return axes or None
+    stack = _normalize_stack(placements)
+    level = level_axes_for(stack)
+    axes = {nm: ax for (nm, _s, _k), ax in zip(stack, level) if ax in names}
     return axes or None
 
 
 def mesh_for_placements(
-    placements: Mapping[str, int], model_parallel: int = 1
+    placements, model_parallel: int = 1
 ) -> jax.sharding.Mesh:
     """A mesh with one device axis per placement (plus optional "model").
 
-    ``{"pods": P, "clients": m}`` maps to shape ``(P, m[, model])`` with axes
-    ``("pod", "data"[, "model"])`` — the outermost placement owns the
-    slowest interconnect dimension. A single placement yields the classic
-    ``("data"[, "model"])`` mesh. Device count must equal the product (use
-    the dry-run driver's fake devices, or shrink the placements)."""
-    if not placements:
+    Any ordered stack factorizes: ``{"clients": n}`` yields the classic
+    ``("data"[, "model"])`` mesh, ``{"pods": P, "clients": m}`` the
+    ``("pod", "data"[, "model"])`` pair (the outermost placement owns the
+    slowest interconnect dimension), ``{"superpods": S, "pods": P,
+    "clients": m}`` the 3-level ``("superpod", "pod", "data")`` mesh, and a
+    stage-kind level (pass a ``PlacementContext`` or ``(name, size, kind)``
+    tuples) owns a ``"stage"`` axis — see :func:`level_axes_for` for the
+    naming rule. Device count must equal the product (use the dry-run
+    driver's fake devices, or shrink the placements)."""
+    stack = _normalize_stack(placements)
+    if not stack:
         raise ValueError("placements must not be empty")
-    sizes = tuple(placements.values())
-    if len(sizes) == 1:
-        shape: Tuple[int, ...] = sizes
-        axes: Tuple[str, ...] = ("data",)
-    elif len(sizes) == 2:
-        shape = sizes
-        axes = ("pod", "data")
-    else:
-        raise ValueError(
-            f"at most two placement levels map onto the (pod, data) mesh; "
-            f"got {len(sizes)}: {list(placements)}"
-        )
+    shape: Tuple[int, ...] = tuple(s for _, s, _ in stack)
+    axes: Tuple[str, ...] = level_axes_for(stack)
     if model_parallel > 1:
         shape = shape + (model_parallel,)
         axes = axes + ("model",)

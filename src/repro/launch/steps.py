@@ -27,7 +27,7 @@ from repro.algorithms.rounds import LocalSGDConfig, make_local_sgd_round
 from repro.models import registry
 from repro.models import partitioning
 from repro.models.partitioning import axis_rules, tree_shardings
-from repro.launch.mesh import partition_axes_for
+from repro.launch.mesh import REPLICA_AXES, partition_axes_for
 
 
 def _is_axes_leaf(v):
@@ -87,9 +87,9 @@ def strategy_rules(cfg, fsdp: bool):
     rules = dict(fsdp_rules(fsdp))
     if cfg.mesh_strategy == "dp":
         dp_chain = (
-            ("pod", "data", "model"),
-            ("data", "model"),
-            ("pod", "data"),
+            REPLICA_AXES + ("model",),
+            REPLICA_AXES[1:] + ("model",),
+            REPLICA_AXES,
             "data",
         )
         rules.update(
@@ -109,7 +109,7 @@ def strategy_rules(cfg, fsdp: bool):
                 "p_ff": (None,),
                 "p_experts": (None,),
                 "p_vocab": (None,),
-                "p_fsdp": ((("data", "model"),) + (("data",), None))
+                "p_fsdp": ((REPLICA_AXES[1:] + ("model",),) + (("data",), None))
                 if fsdp
                 else (None,),
             }

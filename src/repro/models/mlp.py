@@ -42,7 +42,9 @@ def apply(cfg, p, x):
         # quantized TP reduction (see tpcomm): forward-only steps
         b, s_, f = h.shape
         mesh = current_mesh()
-        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        from repro.launch.mesh import REPLICA_AXES
+
+        batch_axes = tuple(a for a in REPLICA_AXES if a in mesh.axis_names)
         out = tpcomm.int8_matmul_reduce(
             h.reshape(b * s_, f), p["wo"], batch_axes=batch_axes,
             out_dtype=x.dtype,

@@ -64,7 +64,9 @@ def _combine(cfg, eout, combine, out_shape):
         from repro import compat
 
         mesh = current_mesh()
-        batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        from repro.launch.mesh import REPLICA_AXES
+
+        batch = tuple(a for a in REPLICA_AXES if a in mesh.axis_names)
         bspec = batch if len(batch) > 1 else (batch[0] if batch else None)
 
         def local(eo, cm):

@@ -23,13 +23,15 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.launch.mesh import REPLICA_AXES
+
 AxisName = Union[str, Tuple[str, ...], None]
 
 # Default logical → mesh-axis rules. First matching mesh axis set that exists
 # on the ambient mesh (and divides the dim, for parameters) wins.
 DEFAULT_RULES: Dict[str, Tuple[AxisName, ...]] = {
     # activations
-    "batch": (("pod", "data"), "data"),
+    "batch": (REPLICA_AXES, "data"),
     "seq": (None,),
     "embed": ("model", None),  # sharded residual stream (Megatron seq-par analogue)
     "heads": ("model",),
@@ -49,7 +51,7 @@ DEFAULT_RULES: Dict[str, Tuple[AxisName, ...]] = {
     "p_fsdp": ("data", None),     # FSDP storage axis
     "layers": (None,),
     # misc
-    "kv_batch": (("pod", "data"), "data"),
+    "kv_batch": (REPLICA_AXES, "data"),
     "kv_head_dim": ("model", None),
     "recurrent_width": ("model",),
 }

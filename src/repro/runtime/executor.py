@@ -122,6 +122,7 @@ def fingerprint_parts(plan) -> List[Tuple[str, bytes]]:
     """
     parts: List[Tuple[str, bytes]] = [
         ("placements", str(plan.placements).encode()),
+        ("placement_kinds", str(tuple(plan.placement_kinds)).encode()),
         (
             "partitioned_invars",
             str(tuple(int(d) for d in plan.partitioned_invars)).encode(),
@@ -286,12 +287,21 @@ class _PlanTracer:
                 for eqn in stage.eqns:
                     for o, val in zip(eqn.outvars, interp._eval_eqn(eqn, read)):
                         write(o, val)
-            elif isinstance(stage, (interp.Broadcast, interp.Reduce)):
+            elif isinstance(
+                stage, (interp.Broadcast, interp.Reduce, interp.Transfer)
+            ):
                 eqn = stage.eqn
                 vals = interp._eval_eqn(eqn, read)
                 if self.constrain is not None:
                     names, i = interp._eqn_placement(eqn)
-                    depth = i + 1 if isinstance(stage, interp.Broadcast) else i
+                    # Broadcast lands one level deeper (depth i+1), Reduce
+                    # one level up (depth i); Transfer stays at the stage
+                    # level's own depth i+1 — that constraint is what pins
+                    # the stage axis so the shift lowers to neighbor
+                    # collective-permute traffic.
+                    depth = (
+                        i if isinstance(stage, interp.Reduce) else i + 1
+                    )
                     vals = [self.constrain(v, depth) for v in vals]
                 for o, val in zip(eqn.outvars, vals):
                     write(o, val)
@@ -426,8 +436,8 @@ def _make_constrainer(plan, mesh, placement_axes):
     placement_axes = placement_axes or {}
     ctx = placement_lib.PlacementContext(
         placements=tuple(
-            placement_lib.Placement(n, s, placement_axes.get(n))
-            for n, s in plan.placements
+            placement_lib.Placement(n, s, placement_axes.get(n), kind=k)
+            for (n, s), k in zip(plan.placements, plan.placement_kinds)
         ),
         mesh=mesh,
     )

@@ -359,9 +359,9 @@ class TestRetrace:
             h.update(data)
         assert h.hexdigest() == executor.plan_fingerprint(plan)
         names = [n for n, _ in executor.fingerprint_components(plan)]
-        assert names[:5] == [
-            "placements", "partitioned_invars", "partitioned_outvars",
-            "jaxpr", "stage_skeleton",
+        assert names[:6] == [
+            "placements", "placement_kinds", "partitioned_invars",
+            "partitioned_outvars", "jaxpr", "stage_skeleton",
         ]
 
 
@@ -559,6 +559,24 @@ class TestLints:
         vs = run_lints(root=root, rules=["jit-of-plan"])
         assert sorted(v.path for v in vs) == [
             "src/repro/core/bad.py", "src/repro/launch/bad2.py"]
+
+    def test_mesh_axes_literal_rule(self, tmp_path):
+        root = str(tmp_path)
+        _write(root, "src/repro/runtime/bad.py", """\
+            AXES = ("pod", "data")
+        """)
+        _write(root, "src/repro/launch/mesh.py", """\
+            REPLICA_AXES = ("pod", "data")
+            DEEP = ("superpod", "pod", "data")
+        """)
+        _write(root, "src/repro/models/ok.py", """\
+            spec = ("batch", "model")
+            one = ("data",)
+        """)
+        vs = run_lints(root=root, rules=["mesh-axes-literal"])
+        assert [(v.path, v.line) for v in vs] == [
+            ("src/repro/runtime/bad.py", 1)]
+        assert "launch/mesh.py" in vs[0].message
 
     def test_suppression_marker(self, tmp_path):
         root = str(tmp_path)

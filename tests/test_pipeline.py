@@ -1,0 +1,465 @@
+"""Pipeline-stage placements: stage_transfer/stage_map semantics, the 1F1B
+microbatch lowering, and the analysis passes' stage-kind awareness.
+
+Acceptance bar (ISSUE 7): a pipelined program (>= 2 stages, >= 4
+microbatches) built by ``make_pipelined_round`` compiles to ONE
+donation-aware executable that is bitwise-equal to ``run_plan`` on CPU,
+holds the zero-retrace invariant, and analyzes clean via ``plan.analyze()``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as drjax
+from repro.algorithms import (
+    PipelineConfig,
+    make_pipelined_round,
+    pipeline_bubble_fraction,
+)
+from repro.analysis import commcost, placement_safety
+from repro.core import interpreter as interp
+from repro.core import placement as placement_lib
+from repro.core import primitives as prims
+from repro.runtime.executor import compile_plan
+
+
+def stage_ctx(num_stages=3, clients=4):
+    return placement_lib.make_context(
+        None,
+        placements={"stages": num_stages, "clients": clients},
+        placement_kinds={"stages": "stages"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# placement kinds
+# ---------------------------------------------------------------------------
+
+
+class TestPlacementKinds:
+    def test_default_kind_is_replicas(self):
+        ctx = placement_lib.make_context(None, placements={"clients": 4})
+        assert ctx.kinds == ("replicas",)
+        assert ctx.stage_names() == ()
+
+    def test_stage_kind_recorded(self):
+        ctx = stage_ctx()
+        assert ctx.kinds == ("stages", "replicas")
+        assert ctx.stage_names() == ("stages",)
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="kind"):
+            placement_lib.Placement("p", 2, None, kind="banana")
+
+    def test_unknown_placement_name_in_kinds_rejected(self):
+        with pytest.raises(ValueError):
+            placement_lib.make_context(
+                None,
+                placements={"clients": 4},
+                placement_kinds={"nope": "stages"},
+            )
+
+
+# ---------------------------------------------------------------------------
+# stage_transfer semantics
+# ---------------------------------------------------------------------------
+
+
+class TestStageTransfer:
+    def test_forward_shift_zero_fills_entry(self):
+        ctx = stage_ctx(3, 4)
+        with drjax.placement_context(ctx):
+            x = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+            y = drjax.stage_transfer(x)
+        np.testing.assert_array_equal(np.asarray(y)[0], np.zeros(4))
+        np.testing.assert_array_equal(np.asarray(y)[1:], np.asarray(x)[:2])
+
+    def test_negative_shift(self):
+        ctx = stage_ctx(3, 4)
+        with drjax.placement_context(ctx):
+            x = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+            y = drjax.stage_transfer(x, shift=-1)
+        np.testing.assert_array_equal(np.asarray(y)[:2], np.asarray(x)[1:])
+        np.testing.assert_array_equal(np.asarray(y)[2], np.zeros(4))
+
+    def test_wrap_is_roll(self):
+        ctx = stage_ctx(3, 4)
+        with drjax.placement_context(ctx):
+            x = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+            y = drjax.stage_transfer(x, wrap=True)
+        np.testing.assert_array_equal(
+            np.asarray(y), np.roll(np.asarray(x), 1, axis=0)
+        )
+
+    def test_oversized_shift_zeroes_everything(self):
+        ctx = stage_ctx(3, 4)
+        with drjax.placement_context(ctx):
+            x = jnp.ones((3, 4), jnp.float32)
+            y = drjax.stage_transfer(x, shift=5)
+        np.testing.assert_array_equal(np.asarray(y), np.zeros((3, 4)))
+
+    def test_transpose_is_reverse_transfer(self):
+        """Linear primitive: grad of sum(transfer(x, +1)) must equal
+        transfer(ones, -1) — the backward pipeline falls out of AD."""
+        ctx = stage_ctx(3, 4)
+        with drjax.placement_context(ctx):
+            x = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+            g = jax.grad(
+                lambda v: jnp.sum(drjax.stage_transfer(v) ** 2)
+            )(x)
+            fwd = drjax.stage_transfer(x)
+            expect = drjax.stage_transfer(
+                jax.tree_util.tree_map(lambda v: 2.0 * v, fwd), shift=-1
+            )
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(expect))
+
+    def test_tree_polymorphic(self):
+        ctx = stage_ctx(3, 4)
+        with drjax.placement_context(ctx):
+            tree = {"a": jnp.ones((3, 4)), "b": jnp.zeros((3, 4, 2))}
+            out = drjax.stage_transfer(tree)
+        assert set(out) == {"a", "b"}
+        np.testing.assert_array_equal(np.asarray(out["a"][0]), np.zeros(4))
+
+    def test_batching_rule(self):
+        ctx = stage_ctx(3, 4)
+        with drjax.placement_context(ctx):
+            xs = jnp.arange(24, dtype=jnp.float32).reshape(2, 3, 4)
+            out = jax.vmap(lambda v: drjax.stage_transfer(v))(xs)
+            per = jnp.stack([
+                drjax.stage_transfer(xs[0]), drjax.stage_transfer(xs[1]),
+            ])
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(per))
+
+    def test_requires_stage_kind_placement(self):
+        ctx = placement_lib.make_context(None, placements={"clients": 4})
+        with drjax.placement_context(ctx):
+            with pytest.raises(ValueError, match="stage"):
+                drjax.stage_transfer(jnp.ones((4, 2)))
+
+    def test_explicit_replica_placement_rejected(self):
+        ctx = stage_ctx(3, 4)
+        with drjax.placement_context(ctx):
+            with pytest.raises(ValueError, match="kind"):
+                drjax.stage_transfer(
+                    jnp.ones((3, 4)), placement="clients"
+                )
+
+    def test_bind_rejects_replica_kind_at_abstract_eval(self):
+        ctx = placement_lib.make_context(None, placements={"clients": 4})
+        with drjax.placement_context(ctx):
+            with pytest.raises(ValueError):
+                prims.bind_stage_transfer(
+                    jnp.ones((4, 2)), placement="clients"
+                )
+
+
+class TestWrongKindCollectives:
+    def test_broadcast_at_stage_level_rejected(self):
+        ctx = stage_ctx()
+        with drjax.placement_context(ctx):
+            with pytest.raises(ValueError, match="replicas"):
+                drjax.broadcast(jnp.ones(()), placement="stages")
+
+    def test_reduce_at_stage_level_rejected(self):
+        ctx = stage_ctx()
+        with drjax.placement_context(ctx):
+            with pytest.raises(ValueError, match="replicas"):
+                drjax.reduce_sum(
+                    jnp.ones((3, 4)), placement="stages"
+                )
+
+    def test_default_span_collectives_guarded(self):
+        ctx = stage_ctx()
+        with drjax.placement_context(ctx):
+            with pytest.raises(ValueError, match="stage_transfer"):
+                drjax.broadcast(jnp.ones(()))
+            with pytest.raises(ValueError, match="stage_transfer"):
+                drjax.reduce_mean(jnp.ones((3, 4)))
+            with pytest.raises(ValueError, match="stage_transfer"):
+                drjax.reduce_weighted_mean(
+                    jnp.ones((3, 4)), jnp.ones((3, 4))
+                )
+
+    def test_replica_level_still_works(self):
+        ctx = stage_ctx(3, 4)
+        with drjax.placement_context(ctx):
+            out = drjax.reduce_sum(jnp.ones((3, 4)), placement="clients")
+        assert out.shape == (3,)
+        np.testing.assert_array_equal(np.asarray(out), 4.0 * np.ones(3))
+
+
+# ---------------------------------------------------------------------------
+# stage_map
+# ---------------------------------------------------------------------------
+
+
+class TestStageMap:
+    def test_single_callable_is_map_fn(self):
+        ctx = stage_ctx(3, 4)
+        with drjax.placement_context(ctx):
+            x = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+            a = drjax.stage_map(lambda v: v * 2.0, x)
+            b = drjax.map_fn(lambda v: v * 2.0, x, placement="stages")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_heterogeneous_stage_functions(self):
+        ctx = stage_ctx(3, 4)
+        with drjax.placement_context(ctx):
+            x = jnp.ones((3, 4), jnp.float32)
+            out = drjax.stage_map(
+                [lambda v: v + 1.0, lambda v: v * 3.0, lambda v: v - 2.0], x
+            )
+        expect = np.stack([
+            np.full(4, 2.0), np.full(4, 3.0), np.full(4, -1.0),
+        ])
+        np.testing.assert_array_equal(np.asarray(out), expect)
+
+    def test_wrong_function_count_rejected(self):
+        ctx = stage_ctx(3, 4)
+        with drjax.placement_context(ctx):
+            with pytest.raises(ValueError, match="3 stages"):
+                drjax.stage_map(
+                    [lambda v: v, lambda v: v], jnp.ones((3, 4))
+                )
+
+    def test_tuple_tree_positional_args(self):
+        ctx = stage_ctx(2, 4)
+        with drjax.placement_context(ctx):
+            a = jnp.ones((2, 4))
+            b = 2.0 * jnp.ones((2, 4))
+            out = drjax.stage_map(
+                [lambda u, v: u + v, lambda u, v: u * v], (a, b)
+            )
+        expect = np.stack([np.full(4, 3.0), np.full(4, 2.0)])
+        np.testing.assert_array_equal(np.asarray(out), expect)
+
+    def test_outer_levels_stay_mapped(self):
+        """A stage level nested INSIDE a replica level: the per-stage fns see
+        one group's slice (outer axes vmapped away)."""
+        ctx = placement_lib.make_context(
+            None,
+            placements={"pods": 2, "stages": 3},
+            placement_kinds={"stages": "stages"},
+        )
+        with drjax.placement_context(ctx):
+            x = jnp.arange(2 * 3 * 4, dtype=jnp.float32).reshape(2, 3, 4)
+            out = drjax.stage_map(
+                [lambda v: v + 1.0, lambda v: v * 2.0, lambda v: v - 1.0], x
+            )
+        xs = np.asarray(x)
+        expect = np.stack(
+            [xs[:, 0] + 1.0, xs[:, 1] * 2.0, xs[:, 2] - 1.0], axis=1
+        )
+        np.testing.assert_array_equal(np.asarray(out), expect)
+
+
+# ---------------------------------------------------------------------------
+# the 1F1B pipelined round
+# ---------------------------------------------------------------------------
+
+
+def pipelined_setup(s=3, m=5, d=4, hetero=True):
+    cfg = PipelineConfig(num_stages=s, num_microbatches=m)
+    if hetero:
+        fns = [
+            (lambda k: (lambda a: a + float(k)))(k) for k in range(s)
+        ]
+    else:
+        fns = lambda a: jnp.tanh(a)
+    round_fn = make_pipelined_round(fns, cfg)
+    mb = jnp.arange(m * d, dtype=jnp.float32).reshape(m, d) / (m * d)
+    act0 = jnp.zeros((s, d), jnp.float32)
+    return round_fn, mb, act0
+
+
+class TestPipelinedRound:
+    def test_outputs_match_sequential_composition(self):
+        round_fn, mb, act0 = pipelined_setup(s=3, m=5)
+        outs, act_final = round_fn(mb, act0)
+        ref = np.asarray(mb) + 0.0 + 1.0 + 2.0  # the three phases composed
+        np.testing.assert_array_equal(np.asarray(outs), ref)
+        assert act_final.shape == act0.shape
+
+    def test_bubble_fraction(self):
+        assert pipeline_bubble_fraction(3, 5) == pytest.approx(2 / 7)
+        assert pipeline_bubble_fraction(1, 8) == 0.0
+        with pytest.raises(ValueError):
+            pipeline_bubble_fraction(0, 4)
+
+    def test_plan_has_transfer_inside_loop(self):
+        round_fn, mb, act0 = pipelined_setup()
+        plan = interp.build_plan(
+            interp.trace(round_fn, mb, act0), round_fn.drjax_context,
+            partitioned_invars=(0, 1),
+        )
+        kinds = [
+            type(st).__name__ for _n, st, _o in plan.named_stages()
+        ]
+        assert "LoopStage" in kinds and "Transfer" in kinds
+        text = plan.to_text()
+        assert "TRANSFER shift=+1 @stages" in text
+        assert "[stages]" in text  # header marks the stage-kind level
+
+    def test_compiled_bitwise_and_zero_retrace(self):
+        """The acceptance criterion: S>=2, M>=4, ONE executable, bitwise
+        equal to run_plan, exactly one trace across repeated calls."""
+        round_fn, mb, act0 = pipelined_setup(s=3, m=5)
+        plan = interp.build_plan(
+            interp.trace(round_fn, mb, act0), round_fn.drjax_context,
+            partitioned_invars=(0, 1),
+        )
+        compiled = compile_plan(plan)
+        ref = drjax.run_plan(plan, mb, act0)
+        for _ in range(3):
+            outs = compiled(mb, act0)
+            for a, b in zip(outs, ref):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert compiled.trace_count == 1
+
+    def test_plan_analyzes_clean(self):
+        round_fn, mb, act0 = pipelined_setup(s=3, m=5)
+        plan = interp.build_plan(
+            interp.trace(round_fn, mb, act0), round_fn.drjax_context,
+            partitioned_invars=(0, 1),
+        )
+        report = plan.analyze()
+        assert not report.errors, report
+
+    def test_donated_round_frees_activation_buffer(self):
+        cfg = PipelineConfig(num_stages=2, num_microbatches=4)
+        round_fn = make_pipelined_round(
+            lambda a: a * 2.0, cfg, donate=True
+        )
+        mb = jnp.ones((4, 3), jnp.float32)
+        act0 = jnp.zeros((2, 3), jnp.float32)
+        outs, act_final = round_fn(mb, act0)
+        assert act0.is_deleted()  # donated into the executable
+        # and the next round can rebind the returned buffer
+        outs2, _ = round_fn(mb, act_final)
+        np.testing.assert_array_equal(np.asarray(outs), np.asarray(outs2))
+
+    def test_grad_through_pipeline(self):
+        """AD through scan + stage_map + stage_transfer: the gradient of a
+        linear pipeline w.r.t. the microbatches is exact."""
+        cfg = PipelineConfig(num_stages=2, num_microbatches=4)
+        round_fn = make_pipelined_round(lambda a: 3.0 * a, cfg)
+        act0 = jnp.zeros((2, 3), jnp.float32)
+
+        def loss(mb):
+            outs, _ = round_fn(mb, act0)
+            return jnp.sum(outs)
+
+        mb = jnp.ones((4, 3), jnp.float32)
+        g = jax.grad(loss)(mb)
+        # each microbatch passes through both stages: d(sum)/d(mb) = 9
+        np.testing.assert_array_equal(
+            np.asarray(g), 9.0 * np.ones((4, 3))
+        )
+
+    def test_single_stage_degenerate(self):
+        cfg = PipelineConfig(num_stages=1, num_microbatches=4)
+        round_fn = make_pipelined_round(lambda a: a + 1.0, cfg)
+        mb = jnp.arange(12, dtype=jnp.float32).reshape(4, 3)
+        act0 = jnp.zeros((1, 3), jnp.float32)
+        outs, _ = round_fn(mb, act0)
+        np.testing.assert_array_equal(
+            np.asarray(outs), np.asarray(mb) + 1.0
+        )
+
+
+# ---------------------------------------------------------------------------
+# analysis passes
+# ---------------------------------------------------------------------------
+
+
+class TestPipelineAnalysis:
+    def _plan(self, s=2, m=4, d=8):
+        round_fn, mb, act0 = pipelined_setup(s=s, m=m, d=d)
+        return interp.build_plan(
+            interp.trace(round_fn, mb, act0), round_fn.drjax_context,
+            partitioned_invars=(0, 1),
+        )
+
+    def test_commcost_prices_transfer_as_ici(self):
+        plan = self._plan(s=2, m=4, d=8)
+        rep = commcost.estimate_comm_cost(plan)
+        transfers = [c for c in rep.per_stage if c.kind == "TRANSFER"]
+        assert transfers, rep.per_stage
+        c = transfers[0]
+        assert c.link == "ici" and c.op == "stage_transfer"
+        # 2 stages, shift 1, non-wrap: one sender; payload = 8 f32 = 32 B;
+        # multiplied by the scan trip count M + S - 1 = 5.
+        assert c.endpoints == 1
+        assert c.payload_bytes == 32.0
+        assert c.multiplier == 5.0
+        assert rep.ici_bytes == 160.0 and rep.dcn_bytes == 0.0
+
+    def test_commcost_wrap_counts_every_stage(self):
+        ctx = stage_ctx(4, 1)
+
+        def f(x):
+            return drjax.stage_transfer(x, wrap=True)
+
+        f.drjax_context = ctx
+        with drjax.placement_context(ctx):
+            x = jnp.ones((4, 1, 8), jnp.float32)
+            plan = interp.build_plan(interp.trace(f, x), ctx)
+        rep = commcost.estimate_comm_cost(plan)
+        (c,) = [c for c in rep.per_stage if c.kind == "TRANSFER"]
+        assert c.endpoints == 4  # ring: no idle boundary stage
+
+    def test_wrong_kind_transfer_finding(self):
+        """A transfer whose eqn context says the level is replica-kind (a
+        hand-mutated plan — abstract eval blocks tracing one) is an error."""
+        plan = self._plan()
+        transfers = [
+            st for _n, st, _o in plan.named_stages()
+            if isinstance(st, interp.Transfer)
+        ]
+        repl = placement_lib.make_context(None, placements={"stages": 2})
+        transfers[0].eqn.params["pctx"] = repl
+        found = placement_safety.check_placement_safety(plan)
+        assert any(
+            f.code == "placement/wrong-kind-comm" and f.severity == "error"
+            for f in found
+        ), found
+
+    def test_wrong_kind_reduce_finding(self):
+        """A reduce addressing a stage-kind level (same mutation trick)."""
+        ctx = placement_lib.make_context(None, placements={"clients": 4})
+
+        def f(x):
+            return drjax.reduce_sum(x)
+
+        f.drjax_context = ctx
+        with drjax.placement_context(ctx):
+            x = jnp.ones((4, 2), jnp.float32)
+            plan = interp.build_plan(interp.trace(f, x), ctx)
+        reduces = [
+            st for _n, st, _o in plan.named_stages()
+            if isinstance(st, interp.Reduce)
+        ]
+        staged = placement_lib.make_context(
+            None, placements={"clients": 4},
+            placement_kinds={"clients": "stages"},
+        )
+        reduces[0].eqn.params["pctx"] = staged
+        found = placement_safety.check_placement_safety(plan)
+        assert any(
+            f.code == "placement/wrong-kind-comm" for f in found
+        ), found
+
+    def test_transfer_stages_in_beam_text(self):
+        """The Beam emitter stages a Transfer (rekey + boundary zero-fill);
+        the emitted pipeline is valid Python like every other plan's."""
+        round_fn, mb, act0 = pipelined_setup(s=2, m=4)
+        plan = interp.build_plan(
+            interp.trace(round_fn, mb, act0), round_fn.drjax_context,
+            partitioned_invars=(0, 1),
+        )
+        text = plan.to_beam()
+        compile(text, "<to_beam>", "exec")
+        assert "Transfer" in text or "_stage_shift" in text, text
