@@ -344,6 +344,167 @@ def make_decode_step(cfg, mesh, *, fsdp: Optional[bool] = None):
     return decode_step, shardings_for
 
 
+# ---------------------------------------------------------------------------
+# continuous-batching serve steps (slot pool — see launch/serve.py)
+# ---------------------------------------------------------------------------
+
+
+def _gather_slot(pool, dims, cslot):
+    """Slice one slot out of the pool as a batch-1 cache tree.
+
+    Batch-bearing leaves keep a size-1 batch axis (``keepdims``) — exactly
+    the shape ``chunk_prefill`` consumes; pos-like leaves drop their leading
+    slot axis back to the per-request layout.
+    """
+
+    def one(leaf, d):
+        if d == registry.POS_LEAF:
+            return jax.lax.dynamic_index_in_dim(leaf, cslot, 0, keepdims=False)
+        return jax.lax.dynamic_index_in_dim(leaf, cslot, d, keepdims=True)
+
+    return jax.tree_util.tree_map(one, pool, dims)
+
+
+def _scatter_slot(pool, cache, dims, cslot):
+    """Write a batch-1 cache tree back into its slot (in place under jit)."""
+
+    def one(pl, cl, d):
+        if d == registry.POS_LEAF:
+            return jax.lax.dynamic_update_slice_in_dim(pl, cl[None], cslot, 0)
+        return jax.lax.dynamic_update_slice_in_dim(pl, cl, cslot, d)
+
+    return jax.tree_util.tree_map(one, pool, cache, dims)
+
+
+def _reset_if(first, cache):
+    """Zero a gathered slot cache when ``first`` (slot reuse: stale KV /
+    recurrent state / pos from the previous occupant must not leak)."""
+    return jax.tree_util.tree_map(
+        lambda l: jnp.where(first, jnp.zeros_like(l), l), cache
+    )
+
+
+def _make_one_slot_decode(cfg):
+    """Batch-1 decode of a single slot, for ``vmap`` over the slot axis.
+
+    vmap strips the slot axis from every pool leaf; batch-bearing leaves
+    re-insert a size-1 batch axis at their metadata index so the stock decode
+    fn sees its normal (batch=1) layout. Per-slot decode also makes decode
+    batch-size-invariant — MoE capacity assignment couples tokens across a
+    batch, so decoding slots jointly would make a request's tokens depend on
+    who else is in flight.
+    """
+    decode_fn = registry.make_decode_fn(cfg)
+    dims = registry.cache_batch_dims(cfg)
+
+    def one_slot(params, token, caches):
+        caches = jax.tree_util.tree_map(
+            lambda l, d: l if d == registry.POS_LEAF else jnp.expand_dims(l, d),
+            caches,
+            dims,
+        )
+        logits, new = decode_fn(params, token[None], caches)
+        new = jax.tree_util.tree_map(
+            lambda l, d: l if d == registry.POS_LEAF else jnp.squeeze(l, d),
+            new,
+            dims,
+        )
+        return logits[0], new
+
+    return one_slot
+
+
+def make_slot_decode_step(cfg, mesh, *, fsdp: Optional[bool] = None):
+    """Decode every slot of the pool one token.
+
+    ``slot_decode_step(params, tokens (slots, 1), pool)`` ->
+    ``(next_tokens (slots, 1), pool)``. The greedy next token is computed on
+    device so the scheduler can chain steps without a host round-trip; free
+    slots decode garbage that the host never reads (fixed shapes beat
+    masking — no recompilation as slots fill/drain).
+    """
+    fsdp = (cfg.family == "moe") if fsdp is None else fsdp
+    rules = fsdp_rules(fsdp)  # TP rules at serve (see make_prefill_step)
+    one_slot = _make_one_slot_decode(cfg)
+    axes = registry.slot_vmap_axes(cfg)
+
+    def slot_decode_step(params, tokens, pool):
+        with axis_rules(mesh, rules):
+            logits, pool = jax.vmap(
+                one_slot, in_axes=(None, 0, axes), out_axes=(0, axes)
+            )(params, tokens, pool)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return nxt, pool
+
+    return slot_decode_step
+
+
+def make_slot_chunk_step(cfg, mesh, *, fsdp: Optional[bool] = None):
+    """Prefill one prompt chunk into one slot (no decode leg).
+
+    ``slot_chunk_step(params, pool, cslot, ctokens (C,), cpos, cfirst)`` ->
+    ``(chunk_token (), pool)``. Shapes specialize on the chunk length C —
+    one trace per chunk bucket. ``cfirst`` (traced bool) zero-resets the slot
+    before the first chunk so slot reuse never reallocates. The returned
+    token is the greedy continuation after the chunk — only meaningful on a
+    prompt's final chunk.
+    """
+    fsdp = (cfg.family == "moe") if fsdp is None else fsdp
+    rules = fsdp_rules(fsdp)
+    chunk_fn = registry.make_chunk_prefill_fn(cfg)
+    dims = registry.cache_batch_dims(cfg)
+
+    def slot_chunk_step(params, pool, cslot, ctokens, cpos, cfirst):
+        with axis_rules(mesh, rules):
+            cache = _reset_if(cfirst, _gather_slot(pool, dims, cslot))
+            logits, cache = chunk_fn(params, ctokens[None], cache, cpos)
+            pool = _scatter_slot(pool, cache, dims, cslot)
+            ctok = jnp.argmax(logits[0], -1).astype(jnp.int32)
+        return ctok, pool
+
+    return slot_chunk_step
+
+
+def make_serve_step(cfg, mesh, *, fsdp: Optional[bool] = None):
+    """Fused continuous-batching step: decode all slots + one prefill chunk.
+
+    ``serve_step(params, tokens (slots, 1), pool, cslot, ctokens (C,), cpos,
+    cfirst, cemit)`` -> ``(next_tokens (slots, 1), pool)``. A newly admitted
+    request's prefill chunk rides inside the same compiled step as the
+    in-flight decodes, so admission never stalls decoding. The chunked
+    slot's cache is gathered *before* the decode leg and scattered back
+    *after* it — the decode leg's garbage write to that slot (it decodes
+    every slot unconditionally) is overwritten wholesale, which is what
+    makes at-most-one-request-mid-prefill a safe invariant. When ``cemit``
+    is set (final chunk of a prompt) the chunk's greedy token is spliced
+    into the device-side token feed at ``cslot`` so the request starts
+    decoding on the very next step.
+    """
+    fsdp = (cfg.family == "moe") if fsdp is None else fsdp
+    rules = fsdp_rules(fsdp)
+    one_slot = _make_one_slot_decode(cfg)
+    chunk_fn = registry.make_chunk_prefill_fn(cfg)
+    dims = registry.cache_batch_dims(cfg)
+    axes = registry.slot_vmap_axes(cfg)
+
+    def serve_step(params, tokens, pool, cslot, ctokens, cpos, cfirst, cemit):
+        with axis_rules(mesh, rules):
+            cache = _reset_if(cfirst, _gather_slot(pool, dims, cslot))
+            logits, pool = jax.vmap(
+                one_slot, in_axes=(None, 0, axes), out_axes=(0, axes)
+            )(params, tokens, pool)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            clogits, cache = chunk_fn(params, ctokens[None], cache, cpos)
+            pool = _scatter_slot(pool, cache, dims, cslot)
+            ctok = jnp.argmax(clogits[0], -1).astype(jnp.int32)
+            nxt = nxt.at[cslot, 0].set(
+                jnp.where(cemit, ctok, nxt[cslot, 0])
+            )
+        return nxt, pool
+
+    return serve_step
+
+
 def _encdec_cache_axes(cfg):
     from repro.models import attention
 

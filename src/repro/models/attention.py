@@ -538,9 +538,17 @@ def self_attention(cfg, q, k, v, *, causal=True, window=0):
 # ---------------------------------------------------------------------------
 
 
-def init_cache(cfg, batch: int, max_len: int, *, window: Optional[int] = None):
-    """Fixed-size cache; for local attention pass window to get a ring buffer."""
-    size = min(window, max_len) if window else max_len
+def init_cache(cfg, batch: int, max_len: int, *, window: Optional[int] = None,
+               ring: bool = True):
+    """Fixed-size cache; for local attention pass window to get a ring buffer.
+
+    ``ring=False`` forces the no-ring layout (size == max_len, slot index ==
+    absolute position) even for windowed attention — the layout chunked
+    prefill requires (``chunk_attention`` writes at absolute positions), used
+    by the serve slot pool. The window is then applied as an explicit mask in
+    ``decode_attention``/``chunk_attention``.
+    """
+    size = min(window, max_len) if (window and ring) else max_len
     hkv, hd = cfg.num_kv_heads, cfg.head_dim
     dt = cfg.jnp_dtype
     return {
@@ -603,7 +611,11 @@ def decode_attention(cfg, p, x, cache, *, window: int = 0, rope: bool = True):
         k = common.apply_rope(k, positions, cfg.rope_theta)
 
     size = cache["k"].shape[1]
-    slot = jnp.mod(pos, size) if window else jnp.minimum(pos, size - 1)
+    # Two windowed layouts: a ring buffer (size == window; recency by
+    # overwrite) and the serve-pool "no-ring" layout (size > window, one slot
+    # per absolute position, window applied as an explicit mask below).
+    ring = bool(window) and size == window
+    slot = jnp.mod(pos, size) if ring else jnp.minimum(pos, size - 1)
     ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
     cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
     kv_axes = cache_logical_axes(cfg)
@@ -620,9 +632,12 @@ def decode_attention(cfg, p, x, cache, *, window: int = 0, rope: bool = True):
 
     # valid slots: for ring buffer all slots < min(pos+1, size); absolute
     # recency is guaranteed by the ring overwrite. For global cache, slots
-    # <= pos are valid.
+    # <= pos are valid. For the no-ring windowed layout slot index == absolute
+    # position, so the sliding window is an explicit mask.
     idx = jnp.arange(size)
     valid = idx < jnp.minimum(pos + 1, size)
+    if window and not ring:
+        valid &= idx > pos - window
     s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(cv.dtype), cv)
@@ -630,6 +645,62 @@ def decode_attention(cfg, p, x, cache, *, window: int = 0, rope: bool = True):
     out = out_proj(p, out)
     new_cache = {"k": ck, "v": cv, "pos": pos + 1}
     return out, new_cache
+
+
+def chunk_attention(cfg, p, x, cache, positions, *, window: int = 0):
+    """Chunked-prefill continuation: C prompt tokens against an existing cache.
+
+    x: (B, C, D); ``positions`` (B, C) absolute token positions (``pos0 +
+    arange(C)`` with ``pos0 == cache["pos"]``). Requires the no-ring cache
+    layout (``init_cache(..., ring=False)`` — slot index == absolute
+    position): writes the chunk's K/V at ``[pos0, pos0 + C)`` and attends each
+    chunk query over all cached positions ``<= q_pos`` (window applied as an
+    explicit mask). For a global-attention config this is bitwise-equal to
+    ``naive_attention`` full prefill over the same prefix: masked slots get
+    an additive ``NEG_INF`` whose ``exp`` underflows to exactly 0, so the
+    softmax sums and the value contraction see exact zeros.
+    """
+    b, c, _ = x.shape
+    pos0 = cache["pos"]
+    size = cache["k"].shape[1]
+    # Contract (not statically checkable): the cache must hold every absolute
+    # position, i.e. size == max_len (``init_cache(..., ring=False)``). A
+    # windowed *ring* cache (size == window < max_len) would wrap — its
+    # writes clamp silently. A cache with size == window == max_len is fine:
+    # ring and no-ring layouts coincide when no position can wrap.
+    q = _proj(x, p["wq"], p.get("bq"))
+    k = _proj(x, p["wk"], p.get("bk"))
+    v = _proj(x, p["wv"], p.get("bv"))
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, pos0, 0, 0)
+    )
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, pos0, 0, 0)
+    )
+    kv_axes = cache_logical_axes(cfg)
+    ck = with_logical_constraint(ck, kv_axes)
+    cv = with_logical_constraint(cv, kv_axes)
+
+    hq, hd = cfg.num_heads, cfg.head_dim
+    hkv = cfg.num_kv_heads
+    g = hq // hkv
+    qg = q.reshape(b, c, hkv, g, hd)
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, ck, preferred_element_type=jnp.float32
+    ) * (1.0 / math.sqrt(hd))
+    q_pos = pos0 + jnp.arange(c)
+    idx = jnp.arange(size)
+    ok = idx[None, :] <= q_pos[:, None]
+    if window and window > 0:
+        ok &= idx[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(ok[None, None, None, :, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(cv.dtype), cv)
+    out = out.reshape(b, c, hq, hd)
+    out = out_proj(p, out)
+    return out, {"k": ck, "v": cv, "pos": pos0 + c}
 
 
 # ---------------------------------------------------------------------------

@@ -3,7 +3,11 @@
 ``block_apply(cfg, kind, params, x, positions, mode, cache)`` where
 
  * ``kind``  ∈ {"attention", "recurrent", "rwkv"}
- * ``mode``  ∈ {"train", "prefill", "decode"}
+ * ``mode``  ∈ {"train", "prefill", "decode", "chunk"}
+
+"chunk" is chunked prefill for the serve runtime: like "prefill" but it
+*continues* an existing cache/state (no-ring attention layout, recurrent
+state threading) instead of filling a fresh one.
  * ``cache`` is the block's decode state (KV cache / LRU state / WKV state)
 
 Returns ``(x_out, aux_loss, new_cache)``. ``aux_loss`` is nonzero only for
@@ -57,10 +61,14 @@ def block_axes(cfg, kind: str = "attention"):
     return ax
 
 
-def block_cache_init(cfg, kind: str, batch: int, max_len: int):
+def block_cache_init(cfg, kind: str, batch: int, max_len: int, *,
+                     ring: bool = True):
+    """``ring=False`` builds the no-ring (slot == absolute position) layout
+    chunked prefill requires — the serve slot pool's layout."""
     if kind == "attention":
         window = cfg.window_size if cfg.attention == "local" else None
-        return attention.init_cache(cfg, batch, max_len, window=window)
+        return attention.init_cache(cfg, batch, max_len, window=window,
+                                    ring=ring)
     if kind == "recurrent":
         return rglru.init_state(cfg, batch)
     if kind == "rwkv":
@@ -106,6 +114,10 @@ def block_apply(
             attn_out, new_cache = attention.decode_attention(
                 cfg, ap, h, cache, window=window
             )
+        elif mode == "chunk":
+            attn_out, new_cache = attention.chunk_attention(
+                cfg, ap, h, cache, positions, window=window
+            )
         else:
             q, k, v = attention.qkv(cfg, ap, h, positions)
             attn_out = attention.self_attention(
@@ -124,6 +136,8 @@ def block_apply(
         rp = p["rec"]
         if mode == "decode":
             rec_out, new_cache = rglru.decode_step(cfg, rp, h, cache)
+        elif mode == "chunk":
+            rec_out, new_cache = rglru.prefill(cfg, rp, h, state=cache)
         elif mode == "prefill":
             rec_out, new_cache = rglru.prefill(cfg, rp, h)
         else:
@@ -136,14 +150,14 @@ def block_apply(
 
     elif kind == "rwkv":
         tp = p["tm"]
-        if mode in ("decode", "prefill"):
+        if mode in ("decode", "prefill", "chunk"):
             tm_out, (tm_shift, wkv_state) = rwkv.time_mix(
                 cfg,
                 tp,
                 h,
                 shift_state=cache["tm_shift"],
                 wkv_state=cache["wkv"],
-                chunked=(mode == "prefill"),
+                chunked=(mode != "decode"),
             )
             x = x + tm_out
             h2 = common.rmsnorm_apply(p["ln2"], x, cfg.norm_eps)

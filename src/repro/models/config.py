@@ -54,6 +54,11 @@ class ModelConfig:
     frontend: str = "none"
     num_frontend_tokens: int = 0  # patch/frame embeddings per example
 
+    # --- serving ---
+    # Token id that terminates generation (None: generate max_new tokens).
+    # The serve schedulers stop a slot as soon as this id is emitted.
+    eos_id: Optional[int] = None
+
     # --- numerics / structure ---
     act: str = "silu"  # silu (SwiGLU) | gelu (GeGLU)
     norm_eps: float = 1e-6

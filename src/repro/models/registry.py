@@ -193,6 +193,95 @@ def make_decode_fn(cfg: ModelConfig):
     return decode_fn
 
 
+# ---------------------------------------------------------------------------
+# serve slot-pool metadata (continuous-batching runtime)
+# ---------------------------------------------------------------------------
+
+POS_LEAF = -1  # sentinel: leaf has no batch axis (e.g. attention "pos")
+
+
+def _axis_tuple_leaf(v):
+    return isinstance(v, tuple) and all(
+        isinstance(e, (str, type(None))) for e in v
+    )
+
+
+def cache_batch_dims(cfg: ModelConfig):
+    """Per-leaf batch-axis index for the decode-cache pytree.
+
+    Mirrors the ``init_caches`` structure. Each leaf is the index of the axis
+    that carries requests ("batch"/"kv_batch" in ``cache_axes``), or
+    ``POS_LEAF`` (-1) for leaves with no batch axis (scalar positions). The
+    serve slot pool uses this to (a) give pos-like leaves a leading slot axis
+    and (b) drive per-slot ``vmap`` in/out axes — the same metadata covers
+    the whole decoder zoo (attention KV, RG-LRU state, RWKV wkv state).
+    """
+    if cfg.is_encoder_decoder:
+        raise ValueError("slot pools support decoder-only models")
+    axes = family_module(cfg).cache_axes(cfg)
+
+    def leaf_dim(ax):
+        for i, name in enumerate(ax):
+            if name in ("batch", "kv_batch"):
+                return i
+        return POS_LEAF
+
+    return jax.tree_util.tree_map(leaf_dim, axes, is_leaf=_axis_tuple_leaf)
+
+
+def slot_vmap_axes(cfg: ModelConfig):
+    """``vmap`` in/out axes over the slot pool (the slot axis per leaf)."""
+    return jax.tree_util.tree_map(
+        lambda d: 0 if d == POS_LEAF else d, cache_batch_dims(cfg)
+    )
+
+
+def init_slot_pool(cfg: ModelConfig, slots: int, max_len: int):
+    """Allocate the serve cache pool: one fixed buffer set shared by all
+    slots, updated in place via donation for the life of the server.
+
+    Batch-bearing leaves carry ``slots`` on their batch axis; pos-like
+    leaves gain a leading ``(slots,)`` axis so every slot tracks its own
+    position. Attention caches use the no-ring layout (size == ``max_len``,
+    slot index == absolute position) that chunked prefill requires.
+    """
+    caches = family_module(cfg).init_caches(cfg, slots, max_len, ring=False)
+    return jax.tree_util.tree_map(
+        lambda leaf, d: leaf
+        if d != POS_LEAF
+        else jnp.zeros((slots,) + leaf.shape, leaf.dtype),
+        caches,
+        cache_batch_dims(cfg),
+    )
+
+
+def slot_pool_bytes(cfg: ModelConfig, slots: int, max_len: int) -> int:
+    """Device bytes the slot pool pins (for admission-control sizing)."""
+    pool = jax.eval_shape(lambda: init_slot_pool(cfg, slots, max_len))
+    return sum(
+        l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(pool)
+    )
+
+
+def make_chunk_prefill_fn(cfg: ModelConfig):
+    """Chunked-prefill step for the serve runtime.
+
+    ``chunk_fn(params, tokens (B, C), caches, pos0)`` -> (last_logits,
+    caches); continues pre-allocated no-ring caches from absolute position
+    ``pos0``. Token-only decoder models (the serve runtime's scope).
+    """
+    if cfg.is_encoder_decoder or cfg.family == "vlm":
+        raise ValueError(
+            "chunked prefill supports token-only decoder models; "
+            f"{cfg.name} is {cfg.family}"
+        )
+
+    def chunk_fn(params, tokens, caches, pos0):
+        return transformer.chunk_prefill(cfg, params, tokens, caches, pos0)
+
+    return chunk_fn
+
+
 def decode_state_spec(cfg: ModelConfig, batch: int, max_len: int):
     """ShapeDtypeStruct pytree for the decode-time state (KV caches etc.)."""
     mod = family_module(cfg)

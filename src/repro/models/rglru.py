@@ -80,10 +80,18 @@ def _causal_conv(p, x, state=None):
     """Depthwise causal conv, width 4. x: (B, S, W)."""
     w = p["conv"].astype(jnp.float32)  # (4, W)
     xf = x.astype(jnp.float32)
-    if state is not None:  # decode: state (B, 3, W) holds the last 3 inputs
-        buf = jnp.concatenate([state, xf], axis=1)  # (B, 4, W) when S=1
-        out = jnp.einsum("btw,tw->bw", buf, w)[:, None]
-        return out.astype(x.dtype), buf[:, 1:]
+    if state is not None:  # state (B, 3, W) holds the last 3 inputs
+        if x.shape[1] == 1:  # decode
+            buf = jnp.concatenate([state, xf], axis=1)  # (B, 4, W)
+            out = jnp.einsum("btw,tw->bw", buf, w)[:, None]
+            return out.astype(x.dtype), buf[:, 1:]
+        # chunked prefill: continue the conv window across the chunk boundary
+        buf = jnp.concatenate([state, xf], axis=1)  # (B, S+3, W)
+        stacked = jnp.stack(
+            [buf[:, i : i + x.shape[1]] for i in range(_CONV_WIDTH)], axis=-1
+        )  # (B, S, W, 4)
+        out = jnp.einsum("bswt,tw->bsw", stacked, w)
+        return out.astype(x.dtype), buf[:, -(_CONV_WIDTH - 1):]
     pads = jnp.pad(xf, ((0, 0), (_CONV_WIDTH - 1, 0), (0, 0)))
     stacked = jnp.stack(
         [pads[:, i : i + x.shape[1]] for i in range(_CONV_WIDTH)], axis=-1
@@ -149,22 +157,30 @@ def decode_step(cfg, p, x, state):
     return out.astype(x.dtype), {"h": h, "conv": conv_state}
 
 
-def prefill(cfg, p, x):
-    """Run the block over a prefix and return (out, final_state)."""
+def prefill(cfg, p, x, state=None):
+    """Run the block over a prefix and return (out, final_state).
+
+    With ``state`` (a previous chunk's final state) the recurrence, the conv
+    window, and the LRU hidden state all continue across the chunk boundary —
+    the chunked-prefill path of the serve runtime.
+    """
     u = jnp.einsum("bsd,dw->bsw", x, p["w_in"], preferred_element_type=jnp.float32)
     u = u.astype(x.dtype)
     u, gate = jnp.split(u, 2, axis=-1)
-    uc, _ = _causal_conv(p, u)
+    uc, _ = _causal_conv(p, u, None if state is None else state["conv"])
     a, bterm = _gates(p, uc)
-    h = lru_scan(a, bterm)
+    h = lru_scan(a, bterm, h0=None if state is None else state["h"])
     out = h.astype(x.dtype) * jax.nn.gelu(gate)
     out = jnp.einsum("bsw,wd->bsd", out, p["w_out"], preferred_element_type=jnp.float32)
     u32 = u.astype(jnp.float32)
+    if state is not None:
+        # conv inputs seen so far: previous window ++ this chunk
+        u32 = jnp.concatenate([state["conv"], u32], axis=1)
     if u32.shape[1] < _CONV_WIDTH - 1:  # short prefix: left-pad with zeros
         pad = _CONV_WIDTH - 1 - u32.shape[1]
         u32 = jnp.pad(u32, ((0, 0), (pad, 0), (0, 0)))
-    state = {
+    new_state = {
         "h": h[:, -1],
         "conv": u32[:, -(_CONV_WIDTH - 1):],
     }
-    return out.astype(x.dtype), state
+    return out.astype(x.dtype), new_state

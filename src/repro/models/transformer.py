@@ -199,15 +199,15 @@ def loss_fn(cfg, params, batch):
 # ---------------------------------------------------------------------------
 
 
-def init_caches(cfg, batch: int, max_len: int):
+def init_caches(cfg, batch: int, max_len: int, *, ring: bool = True):
     kinds = blocks.layer_kinds(cfg)
     if _uniform(cfg):
-        one = blocks.block_cache_init(cfg, kinds[0], batch, max_len)
+        one = blocks.block_cache_init(cfg, kinds[0], batch, max_len, ring=ring)
         return jax.tree_util.tree_map(
             lambda l: jnp.broadcast_to(l[None], (cfg.num_layers,) + l.shape), one
         )
     return [
-        blocks.block_cache_init(cfg, k, batch, max_len) for k in kinds
+        blocks.block_cache_init(cfg, k, batch, max_len, ring=ring) for k in kinds
     ]
 
 
@@ -246,5 +246,22 @@ def decode_step(cfg, params, token, caches):
     """token: (B, 1) int32. Returns (logits (B, V), new_caches)."""
     logits, _, caches = forward(
         cfg, params, token, mode="decode", caches=caches
+    )
+    return logits[:, -1], caches
+
+
+def chunk_prefill(cfg, params, tokens, caches, pos0):
+    """Process one prompt chunk against pre-allocated no-ring caches.
+
+    tokens: (B, C) int32, caches from ``init_caches(..., ring=False)`` (or a
+    previous chunk's output), pos0: () int32 — absolute position of the
+    chunk's first token. Returns (last_logits (B, V), new_caches). Attention
+    caches must use the no-ring layout (slot == absolute position); recurrent
+    and RWKV states continue across the chunk boundary natively.
+    """
+    b, c = tokens.shape
+    positions = pos0 + jnp.broadcast_to(jnp.arange(c), (b, c))
+    logits, _, caches = forward(
+        cfg, params, tokens, positions=positions, mode="chunk", caches=caches
     )
     return logits[:, -1], caches

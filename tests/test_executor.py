@@ -573,7 +573,7 @@ class TestElasticSplit:
 
 class TestServeCompiled:
     def test_prefill_traces_once_per_shape(self):
-        from repro.launch.serve import BatchScheduler, Request
+        from repro.launch.serve import BatchScheduler, Request, chunk_schedule
         from repro.models import registry
 
         cfg = registry.get_config("stablelm_3b").reduced()
@@ -596,9 +596,11 @@ class TestServeCompiled:
             return sched.run_wave(reqs)
 
         wave()
-        assert sched.prefill_traces == 1
+        # chunked prefill traces one executable per power-of-two bucket the
+        # prompt decomposes into (6 -> [4, 2]), not one per prompt shape
+        assert sched.prefill_traces == len(chunk_schedule(6, sched.chunk))
         wave()  # same prompt shape: no retrace
-        assert sched.prefill_traces == 1
+        assert sched.prefill_traces == len(chunk_schedule(6, sched.chunk))
 
 
 # ---------------------------------------------------------------------------

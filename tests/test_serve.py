@@ -1,42 +1,272 @@
-"""Serving-layer tests: batch scheduler correctness + continuous decode."""
+"""Serve-runtime tests: continuous batching vs static waves, slot pool
+invariants, chunk scheduling, EOS termination, flat trace counts."""
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.launch.serve import BatchScheduler, Request
+from repro.launch.serve import (
+    BatchScheduler,
+    ContinuousBatchingScheduler,
+    Request,
+    StaticWaveScheduler,
+    chunk_schedule,
+)
 from repro.models import registry, transformer
 
 
-def test_scheduler_greedy_matches_manual_decode():
+def _mkreqs(cfg, seed, lens, max_new, arrivals=None):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, (l,)).astype(np.int32),
+            max_new=max_new,
+            arrival=(arrivals[i] if arrivals else 0.0),
+        )
+        for i, l in enumerate(lens)
+    ]
+
+
+def _oracle(cfg, params, prompt, max_new, max_len):
+    """Greedy reference: full prefill + per-request decode."""
+    last, caches = transformer.prefill(
+        cfg, params, jnp.asarray(prompt)[None], max_len=max_len
+    )
+    out, tok = [], jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    for _ in range(max_new):
+        out.append(int(tok[0, 0]))
+        logits, caches = transformer.decode_step(cfg, params, tok, caches)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# chunk scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_schedule_exact_binary_decomposition():
+    for n in range(1, 100):
+        for cmax in (1, 4, 8, 16, 31):
+            chunks = chunk_schedule(n, cmax)
+            assert sum(chunks) == n  # exact: NO padding
+            assert all(c & (c - 1) == 0 for c in chunks)  # powers of two
+            assert all(c <= cmax for c in chunks)
+            assert chunks == sorted(chunks, reverse=True)  # largest first
+    # bounded executable set: every length maps into log2(cmax)+1 buckets
+    buckets = {c for n in range(1, 1000) for c in chunk_schedule(n, 16)}
+    assert buckets <= {1, 2, 4, 8, 16}
+
+
+def test_chunk_schedule_rejects_degenerate():
+    with pytest.raises(ValueError):
+        chunk_schedule(0, 8)
+    with pytest.raises(ValueError):
+        chunk_schedule(5, 0)
+
+
+# ---------------------------------------------------------------------------
+# slot-pool metadata (registry)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "arch", ["stablelm_3b", "rwkv6_3b", "recurrentgemma_2b", "phi35_moe"]
+)
+def test_slot_pool_layout(arch):
+    cfg = registry.get_config(arch).reduced()
+    slots, max_len = 3, 16
+    pool = registry.init_slot_pool(cfg, slots, max_len)
+    dims = registry.cache_batch_dims(cfg)
+    leaves = jax.tree_util.tree_leaves(pool)
+    dleaves = jax.tree_util.tree_leaves(dims)
+    assert len(leaves) == len(dleaves)
+    for leaf, d in zip(leaves, dleaves):
+        if d == registry.POS_LEAF:
+            assert leaf.shape[0] == slots  # pos leaves gain a slot axis
+        else:
+            assert leaf.shape[d] == slots  # batch leaves carry slots
+    assert registry.slot_pool_bytes(cfg, slots, max_len) > 0
+
+
+def test_chunk_prefill_fn_rejects_non_decoder():
+    for arch in ("seamless_m4t_medium", "llava_next_34b"):
+        cfg = registry.get_config(arch).reduced()
+        with pytest.raises(ValueError):
+            registry.make_chunk_prefill_fn(cfg)
+
+
+# ---------------------------------------------------------------------------
+# token identity: continuous == static waves == greedy oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "arch", ["stablelm_3b", "rwkv6_3b", "recurrentgemma_2b"]
+)
+def test_continuous_token_identical_to_static(arch):
+    """Mixed prompt lengths, more requests than slots (slot reuse), and
+    staggered arrivals (mid-stream admission): the scheduling policy must
+    not change a single token."""
+    cfg = registry.get_config(arch).reduced()
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    lens = [6, 13, 8, 3, 9, 5]
+    # tiny staggered arrivals: with ~ms steps these trickle in mid-run
+    arrivals = [i * 2e-4 for i in range(len(lens))]
+    cont = ContinuousBatchingScheduler(cfg, params, slots=2, max_len=32,
+                                       chunk=8)
+    stat = StaticWaveScheduler(cfg, params, batch=2, max_len=32, chunk=8)
+    out_c = cont.run(_mkreqs(cfg, 0, lens, 6, arrivals))
+    out_s = stat.run(_mkreqs(cfg, 0, lens, 6, arrivals))
+    assert out_c == out_s
+
+
+def test_moe_single_chunk_token_identical():
+    """MoE capacity assignment is per-forward, so chunked prefill only
+    matches full prefill when the prompt fits one chunk — the identity
+    sweep for MoE uses power-of-two prompts (documented caveat)."""
+    cfg = registry.get_config("phi35_moe").reduced()
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    lens = [8, 4, 16, 8, 2]
+    cont = ContinuousBatchingScheduler(cfg, params, slots=2, max_len=32,
+                                       chunk=16)
+    stat = StaticWaveScheduler(cfg, params, batch=2, max_len=32, chunk=16)
+    out_c = cont.run(_mkreqs(cfg, 0, lens, 5))
+    out_s = stat.run(_mkreqs(cfg, 0, lens, 5))
+    assert out_c == out_s
+
+
+def test_continuous_matches_greedy_oracle():
+    """Continuous batching vs the plain full-prefill + decode reference
+    (dense/global attention: chunked prefill is bitwise-equal to full
+    prefill, so this must match exactly)."""
     cfg = registry.get_config("stablelm_3b").reduced()
     params = registry.init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
-    prompts = [
-        rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32),
-        rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32),
-    ]
-    max_new = 5
-    reqs = [Request(rid=i, prompt=p, max_new=max_new)
-            for i, p in enumerate(prompts)]
-    sched = BatchScheduler(cfg, params, batch=2, max_len=6 + max_new)
+    lens, max_new, max_len = [6, 11, 4], 5, 24
+    reqs = _mkreqs(cfg, 0, lens, max_new)
+    sched = ContinuousBatchingScheduler(cfg, params, slots=2,
+                                        max_len=max_len, chunk=8)
+    results = sched.run(reqs)
+    for r in reqs:
+        assert results[r.rid] == _oracle(cfg, params, r.prompt, max_new,
+                                         max_len), f"request {r.rid}"
+
+
+def test_slot_reuse_is_clean():
+    """A scheduler instance reused for a second batch of requests (slots
+    zero-reset on admission, no reallocation) must produce the same tokens
+    as a fresh instance."""
+    cfg = registry.get_config("rwkv6_3b").reduced()
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    lens = [7, 5, 12]
+    sched = ContinuousBatchingScheduler(cfg, params, slots=2, max_len=24,
+                                        chunk=8)
+    sched.run(_mkreqs(cfg, 9, [10, 3], 6))  # dirty the pool
+    reused = sched.run(_mkreqs(cfg, 0, lens, 6))
+    fresh = ContinuousBatchingScheduler(cfg, params, slots=2, max_len=24,
+                                        chunk=8).run(_mkreqs(cfg, 0, lens, 6))
+    assert reused == fresh
+
+
+# ---------------------------------------------------------------------------
+# EOS termination
+# ---------------------------------------------------------------------------
+
+
+def test_eos_stops_slot_and_masks_further_tokens():
+    cfg = registry.get_config("stablelm_3b").reduced()
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    lens, max_new = [6, 9], 8
+    base = ContinuousBatchingScheduler(cfg, params, slots=2, max_len=32,
+                                       chunk=8)
+    out = base.run(_mkreqs(cfg, 0, lens, max_new))
+    # pick a token mid-stream of request 0 and declare it EOS
+    eos, cut = out[0][3], 3
+    cfg_eos = dataclasses.replace(cfg, eos_id=eos)
+    sched = ContinuousBatchingScheduler(cfg_eos, params, slots=2, max_len=32,
+                                        chunk=8)
+    reqs = _mkreqs(cfg_eos, 0, lens, max_new)
+    out_eos = sched.run(reqs)
+    # the EOS'd request stops right after emitting EOS...
+    assert out_eos[0] == out[0][: cut + 1]
+    assert out_eos[0][-1] == eos
+    assert reqs[0].done and reqs[0].t_done is not None
+    # ...and contributes no further tokens while the other request is
+    # unaffected (up to its own possible EOS hits)
+    expect_1 = out[1]
+    if eos in expect_1:
+        expect_1 = expect_1[: expect_1.index(eos) + 1]
+    assert out_eos[1] == expect_1
+
+
+def test_eos_in_static_scheduler():
+    cfg = registry.get_config("stablelm_3b").reduced()
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    base = StaticWaveScheduler(cfg, params, batch=2, max_len=24, chunk=8)
+    out = base.run(_mkreqs(cfg, 0, [6, 6], 6))
+    eos = out[0][2]
+    cfg_eos = dataclasses.replace(cfg, eos_id=eos)
+    sched = StaticWaveScheduler(cfg_eos, params, batch=2, max_len=24, chunk=8)
+    out_eos = sched.run(_mkreqs(cfg_eos, 0, [6, 6], 6))
+    assert out_eos[0] == out[0][:3]
+
+
+# ---------------------------------------------------------------------------
+# flat trace counts (the steady-state invariant)
+# ---------------------------------------------------------------------------
+
+
+def test_trace_counts_flat_under_arbitrary_traffic():
+    """After bucket warmup the executable set is fixed: mixed prompt
+    lengths, mid-stream admission and slot reuse must cause ZERO retraces
+    of either the fused serve step or the decode step."""
+    cfg = registry.get_config("stablelm_3b").reduced()
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    sched = ContinuousBatchingScheduler(cfg, params, slots=2, max_len=32,
+                                        chunk=8)
+    # warmup: 2*chunk-1 touches every bucket {8,4,2,1}
+    sched.run(_mkreqs(cfg, 1, [15, 15, 15], 4))
+    warm = (sched.prefill_traces, sched.decode_traces)
+    assert warm[0] == len(chunk_schedule(15, 8))  # one trace per bucket
+    assert warm[1] == 1  # fixed slot shapes: a single decode executable
+    # arbitrary traffic: different lengths, staggered arrivals, slot churn
+    sched.run(_mkreqs(cfg, 2, [1, 9, 3, 14, 6, 2, 11], 5,
+                      arrivals=[i * 1e-4 for i in range(7)]))
+    assert (sched.prefill_traces, sched.decode_traces) == warm
+
+
+def test_static_trace_counts_flat():
+    cfg = registry.get_config("stablelm_3b").reduced()
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    sched = StaticWaveScheduler(cfg, params, batch=2, max_len=32, chunk=8)
+    sched.run(_mkreqs(cfg, 1, [15, 15], 4))
+    warm = (sched.prefill_traces, sched.decode_traces)
+    sched.run(_mkreqs(cfg, 2, [3, 9, 6, 13], 5))
+    assert (sched.prefill_traces, sched.decode_traces) == warm
+
+
+# ---------------------------------------------------------------------------
+# legacy wave API (BatchScheduler name, run_wave entry point)
+# ---------------------------------------------------------------------------
+
+
+def test_wave_greedy_matches_manual_decode():
+    cfg = registry.get_config("stablelm_3b").reduced()
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    max_new, max_len = 5, 11
+    reqs = _mkreqs(cfg, 0, [6, 6], max_new)
+    sched = BatchScheduler(cfg, params, batch=2, max_len=max_len)
     results = sched.run_wave(reqs)
-
-    # manual per-request greedy decode
-    for i, p in enumerate(prompts):
-        toks = jnp.asarray(p)[None]
-        last, caches = transformer.prefill(cfg, params, toks,
-                                           max_len=6 + max_new)
-        expected = []
-        tok = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
-        for _ in range(max_new):
-            expected.append(int(tok[0, 0]))
-            logits, caches = transformer.decode_step(cfg, params, tok, caches)
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        assert results[i] == expected, f"request {i}"
+    for r in reqs:
+        assert results[r.rid] == _oracle(cfg, params, r.prompt, max_new,
+                                         max_len), f"request {r.rid}"
 
 
-def test_scheduler_handles_uneven_max_new():
+def test_wave_handles_uneven_max_new():
     cfg = registry.get_config("rwkv6_3b").reduced()
     params = registry.init_params(jax.random.PRNGKey(1), cfg)
     rng = np.random.default_rng(1)
@@ -50,3 +280,11 @@ def test_scheduler_handles_uneven_max_new():
     results = sched.run_wave(reqs)
     assert len(results[0]) == 2
     assert len(results[1]) == 6
+
+
+def test_request_too_long_rejected():
+    cfg = registry.get_config("stablelm_3b").reduced()
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    sched = ContinuousBatchingScheduler(cfg, params, slots=2, max_len=8)
+    with pytest.raises(ValueError):
+        sched.run(_mkreqs(cfg, 0, [7], 4))
