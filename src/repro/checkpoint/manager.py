@@ -18,6 +18,16 @@ Guarantees:
  * retention — ``keep_last_n`` garbage-collects old steps;
  * auto-resume — ``restore_latest()`` picks the newest complete checkpoint,
    skipping torn ones.
+
+Chaos hooks: ``fault_hook(step) -> None | "torn" | "corrupt"`` is consulted
+once after every completed write and mutates the just-written checkpoint in
+place — ``"torn"`` simulates a crash between the array write and the
+manifest write (directory present, no manifest, stale LATEST), ``"corrupt"``
+a bit-flip on disk (valid npz, sha256 mismatch). Both states MUST be skipped
+by ``restore_latest`` in favor of the previous complete step — that
+skip-and-fall-back path is what the chaos soak (``runtime/chaos.py``)
+exercises under composed failures. ``inject_fault(step, kind)`` applies the
+same mutations to an already-written checkpoint (tests).
 """
 
 from __future__ import annotations
@@ -27,7 +37,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import numpy as np
@@ -37,13 +47,53 @@ def _leaf_key(i: int) -> str:
     return f"leaf_{i:05d}"
 
 
+#: Fault kinds ``fault_hook`` / ``inject_fault`` understand.
+FAULT_KINDS = ("torn", "corrupt")
+
+
+def _apply_fault(step_dir: str, kind: str) -> None:
+    if kind == "torn":
+        _tear_checkpoint(step_dir)
+    elif kind == "corrupt":
+        _corrupt_checkpoint(step_dir)
+    else:
+        raise ValueError(f"unknown checkpoint fault kind {kind!r}; "
+                         f"expected one of {FAULT_KINDS}")
+
+
+def _tear_checkpoint(step_dir: str) -> None:
+    """Simulate a crash mid-write: arrays on disk, manifest never written."""
+    manifest = os.path.join(step_dir, "manifest.json")
+    if os.path.exists(manifest):
+        os.remove(manifest)
+
+
+def _corrupt_checkpoint(step_dir: str) -> None:
+    """Flip one byte of the first non-empty leaf: the npz stays loadable but
+    the manifest's sha256 no longer matches."""
+    path = os.path.join(step_dir, "arrays.npz")
+    data = dict(np.load(path))
+    for key in sorted(data):
+        a = data[key]
+        if a.size == 0:
+            continue
+        raw = bytearray(a.tobytes())
+        raw[0] ^= 0xFF
+        data[key] = np.frombuffer(bytes(raw), dtype=a.dtype).reshape(a.shape)
+        break
+    np.savez(path, **data)
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep_last_n: int = 3):
+    def __init__(self, directory: str, keep_last_n: int = 3,
+                 fault_hook: Optional[Callable[[int], Optional[str]]] = None):
         self.directory = directory
         self.keep_last_n = keep_last_n
+        self.fault_hook = fault_hook
         os.makedirs(directory, exist_ok=True)
         self._writer: Optional[threading.Thread] = None
-        self._write_error: Optional[BaseException] = None
+        # (originating step, exception) — surfaced on the next save()/wait()
+        self._write_error: Optional[Tuple[int, BaseException]] = None
 
     # ------------------------------------------------------------------
     # save
@@ -96,14 +146,18 @@ class CheckpointManager:
                 if os.path.exists(final):
                     shutil.rmtree(final)
                 os.replace(tmp, final)
-                # atomic LATEST pointer
-                ptr_tmp = os.path.join(self.directory, ".LATEST.tmp")
-                with open(ptr_tmp, "w") as f:
-                    f.write(os.path.basename(final))
-                os.replace(ptr_tmp, os.path.join(self.directory, "LATEST"))
+                fault = self.fault_hook(step) if self.fault_hook else None
+                if fault is not None:
+                    _apply_fault(final, fault)
+                if fault != "torn":
+                    # atomic LATEST pointer (a torn write crashed before it)
+                    ptr_tmp = os.path.join(self.directory, ".LATEST.tmp")
+                    with open(ptr_tmp, "w") as f:
+                        f.write(os.path.basename(final))
+                    os.replace(ptr_tmp, os.path.join(self.directory, "LATEST"))
                 self._gc()
-            except BaseException as e:  # surfaced on next wait()
-                self._write_error = e
+            except BaseException as e:  # surfaced on next save()/wait()
+                self._write_error = (step, e)
 
         if blocking:
             _write()
@@ -120,8 +174,21 @@ class CheckpointManager:
 
     def _raise_pending(self):
         if self._write_error is not None:
-            e, self._write_error = self._write_error, None
-            raise RuntimeError("async checkpoint write failed") from e
+            (step, e), self._write_error = self._write_error, None
+            raise RuntimeError(
+                f"async checkpoint write failed at step {step}"
+            ) from e
+
+    def inject_fault(self, step: int, kind: str) -> None:
+        """Mutate an already-written checkpoint in place (chaos testing).
+
+        ``kind="torn"`` removes the manifest (the crash-mid-write state);
+        ``kind="corrupt"`` flips a byte in ``arrays.npz`` so the sha256
+        verification fails. Either way ``restore_latest`` must skip the
+        step and fall back to the previous complete one.
+        """
+        self.wait()
+        _apply_fault(self._step_dir(step), kind)
 
     def _gc(self) -> None:
         steps = sorted(self._complete_steps())

@@ -125,13 +125,25 @@ class _Slot:
 
 
 class _SchedulerBase:
-    """Shared slot-pool state + host-side bookkeeping."""
+    """Shared slot-pool state + host-side bookkeeping.
+
+    ``fault_hook(step_index)`` is the scheduler-level chaos hook: it is
+    called once per dispatched-or-idle scheduler step with the monotonic
+    1-based ``step_index`` and may raise (e.g.
+    :class:`~repro.runtime.failure.SimulatedDeviceFailure`) to simulate a
+    serving-fleet fault mid-run. A harness that catches the fault calls
+    :meth:`reset_slots` and re-submits the unfinished requests — slot reuse
+    is allocation-free (the first prefill chunk zero-resets a slot), so
+    recovery never reallocates the pool and never retraces a compiled step.
+    """
 
     def __init__(self, cfg, params, slots: int, max_len: int,
-                 chunk: int = DEFAULT_CHUNK, mesh=None):
+                 chunk: int = DEFAULT_CHUNK, mesh=None, fault_hook=None):
         self.cfg, self.params = cfg, params
         self.slots, self.max_len, self.chunk = slots, max_len, chunk
         self.eos_id = cfg.eos_id
+        self.fault_hook = fault_hook
+        self.step_index = 0  # monotonic across run() calls
         self._pool = registry.init_slot_pool(cfg, slots, max_len)
         self._tokens = jnp.zeros((slots, 1), jnp.int32)
         self._slots: List[Optional[_Slot]] = [None] * slots
@@ -141,6 +153,19 @@ class _SchedulerBase:
         self._decode = jax.jit(
             self._decode_counter.wrap(decode_step), donate_argnums=(2,)
         )
+
+    def _tick(self) -> None:
+        self.step_index += 1
+        if self.fault_hook is not None:
+            self.fault_hook(self.step_index)
+
+    def reset_slots(self) -> None:
+        """Drop all in-flight work after a fault: free every slot and zero
+        the token feed. The pool buffers are kept — a reused slot is
+        zero-reset by its first chunk — and trace counters are untouched,
+        so post-recovery steps hit the same executables."""
+        self._slots = [None] * self.slots
+        self._tokens = jnp.zeros((self.slots, 1), jnp.int32)
 
     @property
     def prefill_traces(self) -> int:
@@ -186,14 +211,18 @@ class ContinuousBatchingScheduler(_SchedulerBase):
     """Per-step admission; prefill chunks fused into the decode step."""
 
     def __init__(self, cfg, params, slots: int, max_len: int,
-                 chunk: int = DEFAULT_CHUNK, mesh=None):
-        super().__init__(cfg, params, slots, max_len, chunk, mesh)
+                 chunk: int = DEFAULT_CHUNK, mesh=None, fault_hook=None):
+        super().__init__(cfg, params, slots, max_len, chunk, mesh, fault_hook)
         serve_step = steps_lib.make_serve_step(cfg, mesh)
         # one trace per chunk bucket (ctokens shape specializes the step)
         self._serve = jax.jit(
             self._prefill_counter.wrap(serve_step), donate_argnums=(2,)
         )
         self._mid_prefill: Optional[int] = None
+
+    def reset_slots(self) -> None:
+        super().reset_slots()
+        self._mid_prefill = None
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Drive all ``requests`` to completion, honoring ``arrival`` times
@@ -210,6 +239,7 @@ class ContinuousBatchingScheduler(_SchedulerBase):
 
         while remaining:
             t0 = time.perf_counter()
+            self._tick()
             while arrive_i < len(reqs) and reqs[arrive_i].arrival <= clock:
                 waiting.append(reqs[arrive_i])
                 arrive_i += 1
@@ -294,8 +324,8 @@ class StaticWaveScheduler(_SchedulerBase):
     """
 
     def __init__(self, cfg, params, batch: int, max_len: int,
-                 chunk: int = DEFAULT_CHUNK, mesh=None):
-        super().__init__(cfg, params, batch, max_len, chunk, mesh)
+                 chunk: int = DEFAULT_CHUNK, mesh=None, fault_hook=None):
+        super().__init__(cfg, params, batch, max_len, chunk, mesh, fault_hook)
         self.batch = batch
         chunk_step = steps_lib.make_slot_chunk_step(cfg, mesh)
         self._chunk = jax.jit(
@@ -334,6 +364,7 @@ class StaticWaveScheduler(_SchedulerBase):
         first = np.zeros((self.slots, 1), np.int32)
         for slot, req in enumerate(wave):
             t0 = time.perf_counter()
+            self._tick()
             pos, cfirst, ctok = 0, True, None
             for c in chunk_schedule(len(req.prompt), self.chunk):
                 ctok, self._pool = self._chunk(
@@ -364,6 +395,7 @@ class StaticWaveScheduler(_SchedulerBase):
         prev = None
         while True:
             t0 = time.perf_counter()
+            self._tick()
             meta = [
                 (i, s.req) for i, s in enumerate(self._slots) if s is not None
             ]

@@ -83,8 +83,33 @@ def main():
     ap.add_argument("--fail-at", type=int, nargs="*", default=[],
                     help="inject simulated failures at these rounds")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the chaos soak harness instead of training: "
+                         "composed fault injection (device failures, pod "
+                         "dropout/regrowth, straggler deadlines, checkpoint "
+                         "faults, serve traffic) with the production "
+                         "invariants asserted (see repro.runtime.chaos)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
+
+    if args.chaos:
+        from repro.runtime.chaos import ChaosConfig, run_chaos_soak
+
+        report = run_chaos_soak(ChaosConfig(
+            rounds=args.rounds if args.rounds != 100 else 48,
+            seed=args.seed,
+            checkpoint_every=min(args.ckpt_every, 8),
+            ckpt_dir=None,  # soak state is throwaway; never reuse --ckpt-dir
+        ))
+        logger.info(
+            "chaos soak survived: %d failures, %d elastic events, "
+            "%d fallback restores, bitwise=%s",
+            report.device_failures, len(report.elastic_events),
+            report.fallback_restores, report.oracle_bitwise_equal,
+        )
+        print(json.dumps(report.to_json(), indent=2))
+        return
 
     cfg = registry.get_config(args.arch)
     if args.reduced:

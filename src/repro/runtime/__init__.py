@@ -9,8 +9,18 @@ from .executor import (
     fuse_stages,
     plan_fingerprint,
 )
-from .failure import FailureInjector, run_with_recovery
-from .stragglers import StragglerSimulator, straggler_mask
+from .chaos import ChaosConfig, ChaosReport, ChaosSchedule, run_chaos_soak
+from .failure import (
+    DEFAULT_RECOVERABLE,
+    FailureInjector,
+    SimulatedDeviceFailure,
+    run_with_recovery,
+)
+from .stragglers import (
+    StragglerSimulator,
+    effective_round_time,
+    straggler_mask,
+)
 from .elastic import (
     ElasticSchedule,
     make_elastic_hierarchical_round,
@@ -25,9 +35,16 @@ __all__ = [
     "compile_plan",
     "fuse_stages",
     "plan_fingerprint",
+    "ChaosConfig",
+    "ChaosReport",
+    "ChaosSchedule",
+    "run_chaos_soak",
+    "DEFAULT_RECOVERABLE",
     "FailureInjector",
+    "SimulatedDeviceFailure",
     "run_with_recovery",
     "StragglerSimulator",
+    "effective_round_time",
     "straggler_mask",
     "ElasticSchedule",
     "make_elastic_hierarchical_round",

@@ -1,0 +1,725 @@
+"""Chaos soak: composed fault injection with production invariants.
+
+The runtime pieces in this package are individually tested, but production
+failures compose: a pod drops WHILE a straggler deadline is active WHILE the
+latest checkpoint turns out torn WHILE serve traffic shares the fleet. This
+module drives a real hierarchical training round
+(:func:`repro.runtime.elastic.make_elastic_hierarchical_round`, masked
+variant) through :func:`repro.runtime.failure.run_with_recovery` while a
+deterministic, seeded :class:`ChaosSchedule` injects overlapping adversity,
+and asserts the system's production invariants as hard checks:
+
+* **determinism under recovery** — after device failures, checkpoint
+  restores (including skip-and-fall-back over torn/corrupt checkpoints) and
+  restart-from-scratch, the final model + server state is BITWISE identical
+  to an uninterrupted oracle run of the same schedule;
+* **zero retraces under elasticity** — the per-client leg compiles at most
+  once for the whole soak; pod dropout/regrowth recompiles only the small
+  cross-pod leg (one executable per distinct pod count), and the oracle
+  replay adds zero traces of either kind;
+* **bounded tail latency under stragglers** — deadline-masked rounds have a
+  strictly smaller p99 and p99/p50 ratio than the synchronous
+  wait-for-all baseline on the same duration draws;
+* **unbiasedness of the masked mean** — on audit rounds the hierarchical
+  finisher-weighted composition is checked against the flat
+  ``masked_reduce_mean`` reference round over the same cohort;
+* **serve isolation** — concurrent bursts through
+  :class:`~repro.launch.serve.ContinuousBatchingScheduler` complete every
+  request (surviving an injected scheduler fault via
+  ``reset_slots`` + resubmit) with trace counts flat after warmup.
+
+Seeding rule (ROADMAP "Chaos soak"): every chaos stream derives from
+``np.random.SeedSequence([seed, stream_id, ...])`` so streams are
+independent, stable under config changes to OTHER streams, and replayable —
+``step_fn`` is deterministic in the round index, which is what makes
+restore-and-replay exact and the oracle comparison bitwise.
+
+Entry points: ``run_chaos_soak(ChaosConfig(...))`` returns a
+:class:`ChaosReport` (and asserts the invariants unless ``check=False``);
+``launch/train.py --chaos`` and ``benchmarks/chaos.py`` wrap it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.failure import (
+    DEFAULT_RECOVERABLE,
+    FailureInjector,
+    SimulatedDeviceFailure,
+    run_with_recovery,
+)
+from repro.runtime.stragglers import (
+    StragglerSimulator,
+    effective_round_time,
+    straggler_mask,
+)
+
+# Stream ids for SeedSequence([seed, stream_id, ...]) — never renumber
+# (renumbering silently changes every recorded soak).
+STREAM_FAILURES = 1
+STREAM_ELASTIC = 2
+STREAM_DATA = 3
+STREAM_SERVE = 4
+
+
+def _rng(*ids: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence(list(ids)))
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Knobs for one soak. Defaults are the CI 'full soak' shape: 48 rounds
+    with >= 2 device failures, >= 2 elastic events, straggler deadlines every
+    round, 2 checkpoint faults and concurrent serve bursts."""
+
+    rounds: int = 48
+    seed: int = 0
+
+    # training problem (tiny linear regression; the *runtime* is under test)
+    num_pods: int = 4
+    clients_per_pod: int = 2
+    local_steps: int = 2
+    batch: int = 8
+    dim: int = 3  # deliberately != clients_per_pod (plan heuristic)
+    client_lr: float = 0.05
+    server_momentum: float = 0.9
+
+    # fault injection
+    num_device_failures: int = 2
+    num_elastic_events: int = 4
+    num_ckpt_faults: int = 2
+
+    # stragglers
+    straggler_median_s: float = 10.0
+    straggler_sigma: float = 0.6
+    deadline_pct: float = 90.0
+    min_finisher_frac: float = 0.5
+
+    # recovery
+    checkpoint_every: int = 8
+    keep_last_n: int = 3
+    max_restarts: int = 8
+    backoff_base_s: float = 0.0
+    ckpt_dir: Optional[str] = None  # None -> fresh tempdir
+
+    # serve traffic
+    serve_traffic: bool = True
+    serve_every: int = 16
+    serve_requests: int = 3
+    serve_slots: int = 2
+    serve_max_new: int = 4
+    serve_fault: bool = True
+    serve_chunk: int = 8
+    serve_arch: str = "stablelm_3b"
+
+    # audits
+    audit_every: int = 12
+
+    def validate(self) -> None:
+        if self.rounds < 8:
+            raise ValueError(f"need rounds >= 8 for a soak, got {self.rounds}")
+        if self.max_restarts <= self.num_device_failures:
+            raise ValueError(
+                "max_restarts must exceed num_device_failures "
+                f"({self.max_restarts} <= {self.num_device_failures})"
+            )
+        if self.dim == self.clients_per_pod:
+            raise ValueError(
+                "dim must differ from clients_per_pod (the plan's "
+                "partitioned-invar heuristic matches leading dims)"
+            )
+
+
+class ChaosSchedule:
+    """Deterministic, seeded schedule of composed adversity.
+
+    Built once from a :class:`ChaosConfig`; every accessor is a pure
+    function of ``(seed, round)`` so replay after restore sees exactly the
+    data/mask/pod-count the first execution saw.
+    """
+
+    def __init__(self, cfg: ChaosConfig, pod_counts: Tuple[int, ...],
+                 elastic_events: Tuple[Tuple[int, int, int], ...],
+                 failure_rounds: Tuple[int, ...],
+                 ckpt_faults: Dict[int, str],
+                 serve_rounds: Tuple[int, ...],
+                 serve_fault_round: Optional[int],
+                 audit_rounds: frozenset):
+        self.cfg = cfg
+        self.pod_counts = pod_counts
+        self.elastic_events = elastic_events  # (round, old_pods, new_pods)
+        self.failure_rounds = failure_rounds
+        self.ckpt_faults = dict(ckpt_faults)  # checkpoint step -> kind
+        self.serve_rounds = serve_rounds
+        self.serve_fault_round = serve_fault_round
+        self.audit_rounds = audit_rounds
+        self._sim = StragglerSimulator(
+            median_s=cfg.straggler_median_s,
+            sigma=cfg.straggler_sigma,
+            seed=cfg.seed,
+        )
+        # fixed ground-truth weights for the regression data
+        self._w_true = _rng(cfg.seed, STREAM_DATA).standard_normal(
+            cfg.dim
+        ).astype(np.float32)
+
+    @classmethod
+    def from_config(cls, cfg: ChaosConfig) -> "ChaosSchedule":
+        cfg.validate()
+        # --- elastic: alternating drop/regrow at sampled rounds ---
+        rng = _rng(cfg.seed, STREAM_ELASTIC)
+        lo, hi = 2, cfg.rounds - 1
+        k = min(cfg.num_elastic_events, max(0, hi - lo))
+        event_at = set(
+            int(r)
+            for r in rng.choice(np.arange(lo, hi), size=k, replace=False)
+        ) if k else set()
+        pods: List[int] = []
+        events: List[Tuple[int, int, int]] = []
+        cur, drop_next = cfg.num_pods, True
+        for r in range(cfg.rounds):
+            if r in event_at:
+                old = cur
+                if drop_next and cur > 1:
+                    cur -= 1
+                elif cur < cfg.num_pods:
+                    cur += 1
+                else:
+                    cur = max(1, cur - 1)
+                drop_next = not drop_next
+                if cur != old:
+                    events.append((r, old, cur))
+            pods.append(cur)
+
+        # --- device failures: distinct rounds in [1, rounds) ---
+        rng = _rng(cfg.seed, STREAM_FAILURES)
+        nf = min(cfg.num_device_failures, cfg.rounds - 1)
+        failure_rounds = tuple(
+            sorted(
+                int(r)
+                for r in rng.choice(
+                    np.arange(1, cfg.rounds), size=nf, replace=False
+                )
+            )
+        )
+
+        # --- checkpoint faults: break the checkpoint a failure will want.
+        # For each failure round r, the restore target is the last
+        # checkpoint step <= r; faulting exactly that step guarantees the
+        # skip-and-fall-back path runs under real recovery pressure.
+        faults: Dict[int, str] = {}
+        for r in failure_rounds:
+            if len(faults) >= cfg.num_ckpt_faults:
+                break
+            s = (r // cfg.checkpoint_every) * cfg.checkpoint_every
+            if s >= cfg.checkpoint_every and s not in faults:
+                faults[s] = ("corrupt", "torn")[len(faults) % 2]
+
+        # --- serve bursts + one scheduler-level fault ---
+        serve_rounds: Tuple[int, ...] = ()
+        serve_fault_round = None
+        if cfg.serve_traffic:
+            serve_rounds = tuple(
+                r for r in range(1, cfg.rounds) if r % cfg.serve_every == 0
+            )
+            if cfg.serve_fault and serve_rounds:
+                serve_fault_round = serve_rounds[min(1, len(serve_rounds) - 1)]
+
+        # --- unbiasedness audits: periodic + at every elastic transition ---
+        audits = {0} | {
+            r for r in range(cfg.rounds) if r % cfg.audit_every == 0
+        } | {r for (r, _, _) in events}
+
+        return cls(cfg, tuple(pods), tuple(events), failure_rounds, faults,
+                   serve_rounds, serve_fault_round, frozenset(audits))
+
+    # ------------------------------------------------------------------
+    # per-round accessors (pure in (seed, round))
+    # ------------------------------------------------------------------
+
+    def data_for_round(self, r: int, p: int):
+        """Cohort batches: leaves (p, clients_per_pod, local_steps, B, ...)."""
+        cfg = self.cfg
+        rng = _rng(cfg.seed, STREAM_DATA, r)
+        shape = (p, cfg.clients_per_pod, cfg.local_steps, cfg.batch)
+        x = rng.standard_normal(shape + (cfg.dim,)).astype(np.float32)
+        noise = rng.standard_normal(shape).astype(np.float32)
+        y = np.einsum("pcsbd,d->pcsb", x, self._w_true) + 0.05 * noise
+        return jnp.asarray(x), jnp.asarray(y)
+
+    def round_mask_and_times(self, r: int, p: int):
+        """(mask (p, C), masked_round_time_s, synchronous_round_time_s)."""
+        cfg = self.cfg
+        n = p * cfg.clients_per_pod
+        d = self._sim.durations(r, n)
+        deadline = float(np.percentile(d, cfg.deadline_pct))
+        k = max(1, int(np.ceil(cfg.min_finisher_frac * n)))
+        mask = straggler_mask(d, deadline, min_finishers=k)
+        masked_t = effective_round_time(d, deadline, min_finishers=k)
+        return (
+            jnp.reshape(mask, (p, cfg.clients_per_pod)),
+            masked_t,
+            float(d.max()),
+        )
+
+    def serve_requests_for(self, r: int, vocab: int):
+        """One burst of serve requests; prompt lengths stay inside the chunk
+        buckets the warmup covered (<= 2*chunk - 1), so traces stay flat."""
+        from repro.launch.serve import Request
+
+        cfg = self.cfg
+        rng = _rng(cfg.seed, STREAM_SERVE, r)
+        lens = rng.integers(1, 2 * cfg.serve_chunk, size=cfg.serve_requests)
+        return [
+            Request(
+                rid=i,
+                prompt=rng.integers(0, vocab, (int(n),)).astype(np.int32),
+                max_new=cfg.serve_max_new,
+            )
+            for i, n in enumerate(lens)
+        ]
+
+
+@dataclasses.dataclass
+class ChaosReport:
+    """Everything the soak measured; ``assert_invariants`` is the verdict."""
+
+    rounds: int
+    seed: int
+    # recovery
+    restarts: int
+    scratch_restarts: int
+    completed_steps: int
+    replayed_steps: int
+    backoff_s: float
+    device_failures: int
+    failure_rounds: Tuple[int, ...]
+    restores: Tuple[Optional[int], ...]  # restored step per recovery (None=scratch)
+    fallback_restores: int
+    ckpt_faults_injected: Dict[int, str]
+    # elasticity
+    elastic_events: Tuple[Tuple[int, int, int], ...]
+    pods_seen: Tuple[int, ...]
+    client_leg_traces: int
+    client_retraces: int
+    cross_compiles: int
+    oracle_extra_traces: int
+    # stragglers
+    straggler: Dict[str, float]
+    # unbiasedness
+    audit: Dict[str, Any]
+    # training signal
+    loss_first: float
+    loss_final: float
+    # the verdict input
+    oracle_bitwise_equal: bool
+    serve: Optional[Dict[str, Any]]
+    wall_s: float
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["ckpt_faults_injected"] = {
+            str(k): v for k, v in self.ckpt_faults_injected.items()
+        }
+        return json.loads(json.dumps(d))  # normalize tuples -> lists
+
+    def assert_invariants(self) -> None:
+        errs = []
+        if not self.oracle_bitwise_equal:
+            errs.append(
+                "post-recovery state is not bitwise identical to the "
+                "uninterrupted oracle run"
+            )
+        if self.client_retraces != 0:
+            errs.append(
+                f"per-client leg retraced {self.client_retraces}x across "
+                "elastic/recovery events (must be 0)"
+            )
+        if self.oracle_extra_traces != 0:
+            errs.append(
+                f"oracle replay added {self.oracle_extra_traces} traces "
+                "(executables must be reused)"
+            )
+        if self.restarts < self.device_failures:
+            errs.append(
+                f"only {self.restarts} restarts for {self.device_failures} "
+                "injected device failures"
+            )
+        st = self.straggler
+        if st["p99_masked_s"] >= st["p99_sync_s"]:
+            errs.append(
+                "masked p99 round time not below synchronous baseline: "
+                f"{st['p99_masked_s']:.3f} >= {st['p99_sync_s']:.3f}"
+            )
+        if st["tail_ratio_masked"] >= st["tail_ratio_sync"]:
+            errs.append(
+                "masked p99/p50 not below synchronous p99/p50: "
+                f"{st['tail_ratio_masked']:.4f} >= {st['tail_ratio_sync']:.4f}"
+            )
+        if self.audit["max_rel_err"] > 1e-3:
+            errs.append(
+                "hierarchical masked mean diverged from flat "
+                f"masked_reduce_mean reference: rel err "
+                f"{self.audit['max_rel_err']:.2e}"
+            )
+        if self.ckpt_faults_injected and self.fallback_restores < 1:
+            errs.append(
+                "checkpoint faults were injected but no restore fell back "
+                "past a broken checkpoint"
+            )
+        if self.serve is not None:
+            if not self.serve["flat_traces"]:
+                errs.append("serve traces grew after the warmup burst")
+            if self.serve["completed"] != self.serve["requests"]:
+                errs.append(
+                    f"serve completed {self.serve['completed']}/"
+                    f"{self.serve['requests']} requests"
+                )
+            if self.serve["faults_injected"] and not self.serve["recoveries"]:
+                errs.append("serve fault injected but never recovered")
+        if errs:
+            raise AssertionError(
+                "chaos invariants violated:\n  - " + "\n  - ".join(errs)
+            )
+
+
+def _loss_fn(params, batch):
+    x, y = batch
+    pred = jnp.einsum("bd,d->b", x, params["w"]) + params["b"]
+    return jnp.mean((pred - y) ** 2)
+
+
+def _init_state(cfg: ChaosConfig, server_opt):
+    # Non-weak leaves only: a weak-typed scalar (e.g. jnp.float32(0.0))
+    # comes back from checkpoint restore as non-weak numpy, changing the
+    # aval key and forcing a client-leg retrace.
+    key = jax.random.PRNGKey(cfg.seed)
+    params = {
+        "w": jax.random.normal(key, (cfg.dim,), jnp.float32),
+        "b": jnp.zeros((), jnp.float32),
+    }
+    return {"params": params, "server": server_opt.init(params)}
+
+
+def _percentiles(values: List[float]) -> Tuple[float, float]:
+    a = np.asarray(values, np.float64)
+    return float(np.percentile(a, 50)), float(np.percentile(a, 99))
+
+
+class _ServeTraffic:
+    """Lazy serve fleet: a ContinuousBatchingScheduler at a reduced config,
+    warmed on a bucket-covering burst, with a one-shot fault armed on the
+    schedule's designated burst. Recovery = reset_slots + resubmit."""
+
+    def __init__(self, cfg: ChaosConfig):
+        from repro.launch.serve import ContinuousBatchingScheduler, Request
+        from repro.models import registry
+
+        self.cfg = cfg
+        self.scfg = registry.get_config(cfg.serve_arch).reduced()
+        params = registry.init_params(jax.random.PRNGKey(cfg.seed), self.scfg)
+        max_len = (2 * cfg.serve_chunk - 1) + cfg.serve_max_new
+        self.fault = {"at": None, "injected": 0}
+
+        def hook(idx: int) -> None:
+            if self.fault["at"] is not None and idx >= self.fault["at"]:
+                self.fault["at"] = None
+                self.fault["injected"] += 1
+                raise SimulatedDeviceFailure(
+                    f"injected serve fault at scheduler step {idx}"
+                )
+
+        self.sched = ContinuousBatchingScheduler(
+            self.scfg, params, cfg.serve_slots, max_len,
+            chunk=cfg.serve_chunk, fault_hook=hook,
+        )
+        self._request_cls = Request
+        # warmup: one burst whose prompt (2*chunk - 1 tokens) touches every
+        # power-of-two chunk bucket, plus the decode-only step
+        rng = _rng(cfg.seed, STREAM_SERVE)
+        warm = [
+            self._request_cls(
+                rid=i,
+                prompt=rng.integers(
+                    0, self.scfg.vocab_size, (2 * cfg.serve_chunk - 1,)
+                ).astype(np.int32),
+                max_new=2,
+            )
+            for i in range(2)
+        ]
+        self.sched.run(warm)
+        self.warm_traces = (self.sched.prefill_traces,
+                            self.sched.decode_traces)
+        self.fault_armed_once = False
+        self.stats = {
+            "bursts": 0,
+            "requests": 0,
+            "completed": 0,
+            "recoveries": 0,
+        }
+        self._done_rids: Dict[int, set] = {}
+
+    def burst(self, r: int, schedule: ChaosSchedule) -> None:
+        reqs = schedule.serve_requests_for(r, self.scfg.vocab_size)
+        if r == schedule.serve_fault_round and not self.fault_armed_once:
+            self.fault_armed_once = True
+            self.fault["at"] = self.sched.step_index + 3
+        self.stats["bursts"] += 1
+        pending = list(reqs)
+        all_objs = list(reqs)
+        for _ in range(4):
+            if not pending:
+                break
+            try:
+                self.sched.run(pending)
+                break
+            except SimulatedDeviceFailure:
+                self.stats["recoveries"] += 1
+                self.sched.reset_slots()
+                pending = [
+                    self._request_cls(
+                        rid=q.rid, prompt=q.prompt, max_new=q.max_new
+                    )
+                    for q in pending
+                    if not q.done
+                ]
+                all_objs.extend(pending)
+        else:
+            raise RuntimeError("serve burst failed to recover after retries")
+        # replay of a burst overwrites its per-round completion record
+        self._done_rids[r] = {q.rid for q in all_objs if q.done}
+
+    def report(self, num_rounds_requests: int) -> Dict[str, Any]:
+        now = (self.sched.prefill_traces, self.sched.decode_traces)
+        completed = sum(len(s) for s in self._done_rids.values())
+        return {
+            "bursts": self.stats["bursts"],
+            "requests": num_rounds_requests,
+            "completed": completed,
+            "faults_injected": self.fault["injected"],
+            "recoveries": self.stats["recoveries"],
+            "prefill_traces": now[0],
+            "decode_traces": now[1],
+            "flat_traces": now == self.warm_traces,
+        }
+
+
+def run_chaos_soak(cfg: Optional[ChaosConfig] = None, *,
+                   check: bool = True) -> ChaosReport:
+    """Run the soak; returns a :class:`ChaosReport` (asserting the
+    production invariants first unless ``check=False``)."""
+    import tempfile
+
+    from repro.algorithms.rounds import LocalSGDConfig, make_local_sgd_round
+    from repro.optim.optimizers import sgd
+    from repro.optim.server import fedavg_momentum
+    from repro.runtime.elastic import make_elastic_hierarchical_round
+
+    t_start = time.time()
+    cfg = cfg or ChaosConfig()
+    schedule = ChaosSchedule.from_config(cfg)
+    C = cfg.clients_per_pod
+
+    client_opt = sgd(cfg.client_lr)
+    server_opt = fedavg_momentum(1.0, momentum=cfg.server_momentum)
+    round_cfg = LocalSGDConfig(
+        partition_size=C,
+        num_local_steps=cfg.local_steps,
+        straggler_mask=True,
+    )
+    elastic = make_elastic_hierarchical_round(
+        _loss_fn, client_opt, server_opt, round_cfg, straggler_mask=True
+    )
+    init_state = _init_state(cfg, server_opt)
+
+    # flat masked reference rounds for the unbiasedness audits, one per
+    # distinct cohort size (jit cached; state NOT donated — reference reuse)
+    flat_cache: Dict[int, Any] = {}
+
+    def flat_round(n: int):
+        if n not in flat_cache:
+            fcfg = LocalSGDConfig(
+                partition_size=n,
+                num_local_steps=cfg.local_steps,
+                straggler_mask=True,
+            )
+            flat_cache[n] = jax.jit(
+                make_local_sgd_round(_loss_fn, client_opt, server_opt, fcfg)
+            )
+        return flat_cache[n]
+
+    # --- chaos plumbing -------------------------------------------------
+    ckpt_dir = cfg.ckpt_dir or tempfile.mkdtemp(prefix="chaos_ckpt_")
+    remaining_faults = dict(schedule.ckpt_faults)
+    injected_faults: Dict[int, str] = {}
+
+    def ckpt_fault_hook(step: int) -> Optional[str]:
+        kind = remaining_faults.pop(step, None)  # once: replays re-save clean
+        if kind is not None:
+            injected_faults[step] = kind
+        return kind
+
+    mgr = CheckpointManager(
+        ckpt_dir, keep_last_n=cfg.keep_last_n, fault_hook=ckpt_fault_hook
+    )
+    # log every restore_latest outcome (restored step, None for scratch);
+    # entry 0 is the startup probe
+    recovery_log: List[Optional[int]] = []
+    orig_restore_latest = mgr.restore_latest
+
+    def logged_restore_latest(example, verify=True):
+        out = orig_restore_latest(example, verify=verify)
+        recovery_log.append(None if out is None else out[0])
+        return out
+
+    mgr.restore_latest = logged_restore_latest
+
+    injector = FailureInjector(schedule.failure_rounds)
+    fired_failures: List[int] = []
+
+    serve = _ServeTraffic(cfg) if schedule.serve_rounds else None
+
+    # per-round records keyed by round index: replay overwrites with the
+    # identical value (step_fn is deterministic in the round), so replays
+    # never double-count
+    losses: Dict[int, float] = {}
+    masked_t: Dict[int, float] = {}
+    sync_t: Dict[int, float] = {}
+    audit_errs: Dict[int, float] = {}
+
+    def step_fn(r: int, state):
+        try:
+            injector.check(r)
+        except SimulatedDeviceFailure:
+            fired_failures.append(r)
+            raise
+        p = schedule.pod_counts[r]
+        x, y = schedule.data_for_round(r, p)
+        mask, mt, st_ = schedule.round_mask_and_times(r, p)
+        masked_t[r], sync_t[r] = mt, st_
+        batch = {"data": (x, y), "mask": mask}
+        params, server, metrics = elastic.step(
+            state["params"], state["server"], batch
+        )
+        losses[r] = float(metrics["loss"])
+        if r in schedule.audit_rounds:
+            n = p * C
+            ref_p, _, _ = flat_round(n)(
+                state["params"], state["server"],
+                (x.reshape((n,) + x.shape[2:]), y.reshape((n,) + y.shape[2:])),
+                mask.reshape((n,)),
+            )
+            errs = jax.tree_util.tree_map(
+                lambda a, b: float(
+                    np.max(np.abs(np.asarray(a) - np.asarray(b)))
+                    / (np.max(np.abs(np.asarray(b))) + 1e-12)
+                ),
+                params, ref_p,
+            )
+            audit_errs[r] = max(jax.tree_util.tree_leaves(errs))
+        if serve is not None and r in schedule.serve_rounds:
+            serve.burst(r, schedule)
+        return {"params": params, "server": server}
+
+    final_state, stats = run_with_recovery(
+        step_fn,
+        init_state,
+        cfg.rounds,
+        mgr,
+        checkpoint_every=cfg.checkpoint_every,
+        max_restarts=cfg.max_restarts,
+        recoverable=DEFAULT_RECOVERABLE,
+        backoff_base_s=cfg.backoff_base_s,
+    )
+
+    # --- fallback accounting: a recovery fell back iff it restored below
+    # (or from scratch instead of) the newest checkpoint its failure round
+    # implies must exist ---
+    fallbacks = 0
+    for r, s in zip(fired_failures, recovery_log[1:]):
+        expected = (r // cfg.checkpoint_every) * cfg.checkpoint_every
+        if expected > 0 and (s is None or s < expected):
+            fallbacks += 1
+
+    # --- oracle: the same schedule, uninterrupted, on the SAME executor —
+    # must add zero traces and reproduce the final state bitwise ---
+    traces_before = elastic.client_trace_count
+    cross_before = elastic.cross_compile_count
+    o_state = init_state
+    for r in range(cfg.rounds):
+        p = schedule.pod_counts[r]
+        x, y = schedule.data_for_round(r, p)
+        mask, _, _ = schedule.round_mask_and_times(r, p)
+        pp, ss, _ = elastic.step(
+            o_state["params"], o_state["server"], {"data": (x, y), "mask": mask}
+        )
+        o_state = {"params": pp, "server": ss}
+    oracle_extra = (elastic.client_trace_count - traces_before) + (
+        elastic.cross_compile_count - cross_before
+    )
+    bitwise = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(
+            jax.tree_util.tree_leaves(final_state),
+            jax.tree_util.tree_leaves(o_state),
+        )
+    )
+
+    mp50, mp99 = _percentiles([masked_t[r] for r in sorted(masked_t)])
+    sp50, sp99 = _percentiles([sync_t[r] for r in sorted(sync_t)])
+    report = ChaosReport(
+        rounds=cfg.rounds,
+        seed=cfg.seed,
+        restarts=stats["restarts"],
+        scratch_restarts=stats["scratch_restarts"],
+        completed_steps=stats["completed_steps"],
+        replayed_steps=stats["replayed_steps"],
+        backoff_s=stats["backoff_s"],
+        device_failures=injector.failures,
+        failure_rounds=tuple(fired_failures),
+        restores=tuple(recovery_log[1:]),
+        fallback_restores=fallbacks,
+        ckpt_faults_injected=dict(injected_faults),
+        elastic_events=schedule.elastic_events,
+        pods_seen=tuple(sorted(set(schedule.pod_counts))),
+        client_leg_traces=elastic.client_trace_count,
+        client_retraces=max(0, elastic.client_trace_count - 1),
+        cross_compiles=elastic.cross_compile_count,
+        oracle_extra_traces=oracle_extra,
+        straggler={
+            "p50_masked_s": round(mp50, 4),
+            "p99_masked_s": round(mp99, 4),
+            "p50_sync_s": round(sp50, 4),
+            "p99_sync_s": round(sp99, 4),
+            "tail_ratio_masked": round(mp99 / mp50, 4),
+            "tail_ratio_sync": round(sp99 / sp50, 4),
+            "speedup": round(
+                sum(sync_t.values()) / max(sum(masked_t.values()), 1e-9), 4
+            ),
+        },
+        audit={
+            "rounds": sorted(audit_errs),
+            "max_rel_err": max(audit_errs.values()) if audit_errs else 0.0,
+        },
+        loss_first=losses.get(0, float("nan")),
+        loss_final=losses.get(cfg.rounds - 1, float("nan")),
+        oracle_bitwise_equal=bool(bitwise),
+        serve=(
+            serve.report(len(schedule.serve_rounds) * cfg.serve_requests)
+            if serve is not None
+            else None
+        ),
+        wall_s=round(time.time() - t_start, 2),
+    )
+    if check:
+        report.assert_invariants()
+    return report

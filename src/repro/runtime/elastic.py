@@ -67,6 +67,7 @@ def make_elastic_hierarchical_round(
     *,
     loops: str = "native",
     donate_cross: bool = False,
+    straggler_mask: bool = False,
 ):
     """Pod-hierarchical local SGD that survives pod dropout WITHOUT
     recompiling the per-client leg.
@@ -83,6 +84,19 @@ def make_elastic_hierarchical_round(
     ``round_data`` leaves of shape ``(num_pods, clients_per_pod, ...)`` for
     ANY ``num_pods``, so a shrunken cohort after a pod loss re-uses the
     cached client executable and recompiles only the cross-pod leg.
+
+    ``straggler_mask=True`` makes the round deadline-masked end to end:
+    ``step`` then takes ``round_data = {"data": <leaves (num_pods,
+    clients_per_pod, ...)>, "mask": (num_pods, clients_per_pod)}``. The
+    per-pod leg reduces with ``drjax.masked_reduce_mean`` (an unbiased mean
+    over that pod's finishers; a fully-dropped pod yields zeros) and also
+    reduces the finisher count, and the cross-pod leg weights each pod
+    partial by its finisher count — so the composition equals the flat
+    masked mean over ALL finishers (the unbiasedness invariant the chaos
+    soak asserts against :func:`repro.algorithms.rounds.
+    make_local_sgd_round`'s masked path). The mask is data, not control
+    flow: shapes are fixed per pod count and the per-client leg never
+    recompiles when the finisher set changes.
     """
     from repro import core as drjax
     from repro.algorithms.rounds import _make_client_update
@@ -91,30 +105,78 @@ def make_elastic_hierarchical_round(
 
     client_update = _make_client_update(loss_fn, client_opt, cfg)
 
-    @drjax.program(
+    program = drjax.program(
         partition_size=cfg.partition_size,
         partition_axes=cfg.partition_axes,
         mesh=cfg.mesh,
         use_sharding_annotations=cfg.use_sharding_annotations,
     )
-    def client_leg(global_params, pod_data):
-        # The per-pod program: intra-pod leg of the hierarchical round.
-        params_b = drjax.broadcast(global_params)
-        deltas, losses = drjax.map_fn(client_update, (params_b, pod_data))
-        return drjax.reduce_mean(deltas), drjax.reduce_mean(losses)
 
-    def cross_leg(global_params, server_state, partials):
-        # Cross-pod leg: mean of the pod partials (the bytes that cross the
-        # DCN) + the server optimizer step.
-        pod_deltas, pod_losses = partials
-        mean_delta = jax.tree_util.tree_map(
-            lambda d: jnp.mean(d, axis=0), pod_deltas
-        )
-        updates, new_server_state = server_opt.update(
-            mean_delta, server_state, global_params
-        )
-        new_params = apply_updates(global_params, updates)
-        return new_params, new_server_state, {"loss": jnp.mean(pod_losses, 0)}
+    if straggler_mask:
+
+        @program
+        def client_leg(global_params, pod_batch):
+            # Masked intra-pod leg: unbiased mean over the pod's finishers
+            # plus the finisher count (the cross-pod weighting).
+            params_b = drjax.broadcast(global_params)
+            deltas, losses = drjax.map_fn(
+                client_update, (params_b, pod_batch["data"])
+            )
+            mask = pod_batch["mask"]
+            return (
+                drjax.masked_reduce_mean(deltas, mask),
+                drjax.masked_reduce_mean(losses, mask),
+                drjax.reduce_sum(mask),
+            )
+
+        def cross_leg(global_params, server_state, partials):
+            # Finisher-weighted cross-pod mean: sum_p(fin_p * mean_p) /
+            # sum_p(fin_p) == the flat masked mean over all finishers. An
+            # all-dropped cohort (every weight zero) yields zeros, matching
+            # masked_reduce_mean's zero-weight contract.
+            pod_deltas, pod_losses, pod_fin = partials
+            total = jnp.sum(pod_fin)
+            denom = jnp.maximum(total, 1.0)
+
+            def wmean(d):
+                w = pod_fin.reshape((-1,) + (1,) * (d.ndim - 1))
+                s = jnp.sum(d * w, axis=0) / denom
+                return jnp.where(total > 0, s, jnp.zeros_like(s))
+
+            mean_delta = jax.tree_util.tree_map(wmean, pod_deltas)
+            mean_loss = wmean(pod_losses)
+            updates, new_server_state = server_opt.update(
+                mean_delta, server_state, global_params
+            )
+            new_params = apply_updates(global_params, updates)
+            return new_params, new_server_state, {
+                "loss": mean_loss,
+                "finishers": total,
+            }
+
+    else:
+
+        @program
+        def client_leg(global_params, pod_data):
+            # The per-pod program: intra-pod leg of the hierarchical round.
+            params_b = drjax.broadcast(global_params)
+            deltas, losses = drjax.map_fn(client_update, (params_b, pod_data))
+            return drjax.reduce_mean(deltas), drjax.reduce_mean(losses)
+
+        def cross_leg(global_params, server_state, partials):
+            # Cross-pod leg: mean of the pod partials (the bytes that cross
+            # the DCN) + the server optimizer step.
+            pod_deltas, pod_losses = partials
+            mean_delta = jax.tree_util.tree_map(
+                lambda d: jnp.mean(d, axis=0), pod_deltas
+            )
+            updates, new_server_state = server_opt.update(
+                mean_delta, server_state, global_params
+            )
+            new_params = apply_updates(global_params, updates)
+            return new_params, new_server_state, {
+                "loss": jnp.mean(pod_losses, 0)
+            }
 
     return ElasticHierarchicalRound(
         client_leg,

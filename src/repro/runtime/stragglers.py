@@ -34,24 +34,46 @@ class StragglerSimulator:
         return self.median_s * np.exp(self.sigma * rng.standard_normal(n))
 
 
+def _clamped_min_finishers(min_finishers: Optional[int], n: int) -> Optional[int]:
+    """``min_finishers`` capped at the cohort size (asking for more finishers
+    than groups exist can only mean "wait for everyone"), floored at 0."""
+    if min_finishers is None:
+        return None
+    return max(0, min(int(min_finishers), n))
+
+
 def straggler_mask(durations: np.ndarray, deadline_s: float,
                    min_finishers: Optional[int] = None) -> jnp.ndarray:
     """1.0 for groups finishing before the deadline (always >= min_finishers,
-    extending the deadline to the k-th finisher if needed)."""
+    extending the deadline to the k-th finisher if needed).
+
+    ``min_finishers`` is clamped to the cohort size; ``min_finishers == n``
+    therefore keeps every group (the synchronous limit). Without
+    ``min_finishers`` an all-miss round yields the all-zero mask — the
+    matching reduction (``drjax.masked_reduce_mean``) returns zeros for a
+    zero-weight cohort, so the composition stays NaN-free.
+    """
     durations = np.asarray(durations)
     mask = durations <= deadline_s
-    if min_finishers is not None and mask.sum() < min_finishers:
-        kth = np.partition(durations, min_finishers - 1)[min_finishers - 1]
+    k = _clamped_min_finishers(min_finishers, durations.size)
+    if k and mask.sum() < k:
+        kth = np.partition(durations, k - 1)[k - 1]
         mask = durations <= kth
     return jnp.asarray(mask, jnp.float32)
 
 
 def effective_round_time(durations: np.ndarray, deadline_s: float,
                          min_finishers: Optional[int] = None) -> float:
-    """Wall time of the round under deadline dropping."""
+    """Wall time of the round under deadline dropping.
+
+    Without ``min_finishers`` the round ends at the deadline even when every
+    group misses it (you waited the deadline out, then reduced over nobody);
+    with it, the round extends to the k-th finisher.
+    """
     durations = np.asarray(durations)
     mask = durations <= deadline_s
-    if min_finishers is not None and mask.sum() < min_finishers:
-        kth = np.partition(durations, min_finishers - 1)[min_finishers - 1]
+    k = _clamped_min_finishers(min_finishers, durations.size)
+    if k and mask.sum() < k:
+        kth = np.partition(durations, k - 1)[k - 1]
         return float(kth)
     return float(min(deadline_s, durations.max(initial=0.0)))

@@ -97,3 +97,102 @@ class TestFaultModes:
     def test_no_checkpoint_returns_none(self, tmp_path):
         mgr = CheckpointManager(str(tmp_path))
         assert mgr.restore_latest(_tree()) is None
+
+
+class TestWriteErrorSurfacing:
+    def test_async_write_error_carries_originating_step(
+        self, tmp_path, monkeypatch
+    ):
+        import repro.checkpoint.manager as manager_mod
+
+        mgr = CheckpointManager(str(tmp_path))
+
+        def boom(*a, **k):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(manager_mod.np, "savez", boom)
+        mgr.save(7, _tree(), blocking=False)
+        with pytest.raises(RuntimeError, match="step 7") as ei:
+            mgr.wait()
+        assert isinstance(ei.value.__cause__, OSError)
+
+    def test_error_surfaces_on_next_save_too(self, tmp_path, monkeypatch):
+        import repro.checkpoint.manager as manager_mod
+
+        mgr = CheckpointManager(str(tmp_path))
+        real_savez = manager_mod.np.savez
+        calls = {"n": 0}
+
+        def flaky(*a, **k):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise OSError("disk full")
+            return real_savez(*a, **k)
+
+        monkeypatch.setattr(manager_mod.np, "savez", flaky)
+        mgr.save(3, _tree(), blocking=False)
+        with pytest.raises(RuntimeError, match="step 3"):
+            mgr.save(4, _tree(), blocking=False)
+
+
+class TestChaosFaultInjection:
+    def test_corrupt_fault_skipped_in_favor_of_previous_step(self, tmp_path):
+        """A sha256-corrupted arrays.npz is a COMPLETE checkpoint (manifest
+        present) that fails verification — restore_latest must skip it and
+        fall back to the previous complete step."""
+        mgr = CheckpointManager(str(tmp_path))
+        t1, t2 = _tree(1), _tree(2)
+        mgr.save(1, t1)
+        mgr.save(2, t2)
+        mgr.inject_fault(2, "corrupt")
+        assert sorted(mgr._complete_steps()) == [1, 2]  # 2 still "complete"
+        step, restored, _ = mgr.restore_latest(t1)
+        assert step == 1
+        np.testing.assert_array_equal(
+            np.asarray(restored["w"]), np.asarray(t1["w"])
+        )
+
+    def test_torn_fault_hook_mid_training(self, tmp_path):
+        """fault_hook='torn' simulates a crash between the array write and
+        the manifest write: no manifest, stale LATEST pointer, and
+        restore_latest falls back to the previous step."""
+        mgr = CheckpointManager(
+            str(tmp_path),
+            fault_hook=lambda step: "torn" if step == 2 else None,
+        )
+        tree = _tree()
+        mgr.save(1, tree)
+        mgr.save(2, tree)
+        with open(os.path.join(str(tmp_path), "LATEST")) as f:
+            assert f.read() == "step_000000001"  # torn write never advanced it
+        step, _, _ = mgr.restore_latest(tree)
+        assert step == 1
+
+    def test_corrupt_fault_hook_async(self, tmp_path):
+        mgr = CheckpointManager(
+            str(tmp_path),
+            fault_hook=lambda step: "corrupt" if step == 5 else None,
+        )
+        t1, t2 = _tree(1), _tree(2)
+        mgr.save(1, t1)
+        mgr.save(5, t2, blocking=False)
+        step, _, _ = mgr.restore_latest(t1)
+        assert step == 1
+
+    def test_clean_resave_clears_fault(self, tmp_path):
+        """Replay after a restore re-saves the faulted step; the clean write
+        replaces the broken checkpoint."""
+        mgr = CheckpointManager(str(tmp_path))
+        tree = _tree()
+        mgr.save(2, tree)
+        mgr.inject_fault(2, "torn")
+        assert mgr.restore_latest(tree) is None
+        mgr.save(2, tree)
+        step, _, _ = mgr.restore_latest(tree)
+        assert step == 2
+
+    def test_unknown_fault_kind_raises(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _tree())
+        with pytest.raises(ValueError, match="unknown checkpoint fault"):
+            mgr.inject_fault(1, "gamma-ray")

@@ -60,6 +60,94 @@ class TestRecovery:
         assert stats["completed_steps"] == 5  # only 10..15 re-run
 
 
+class TestRecoveryHardening:
+    def test_non_recoverable_error_fails_fast(self, tmp_path):
+        """Programming bugs propagate immediately — no restarts burned on an
+        error every replay would hit again."""
+        mgr = CheckpointManager(str(tmp_path))
+        calls = []
+
+        def step_fn(step, state):
+            calls.append(step)
+            raise TypeError("programming bug")
+
+        with pytest.raises(TypeError, match="programming bug"):
+            run_with_recovery(
+                step_fn, {"x": jnp.float32(0)}, 5, mgr, max_restarts=5
+            )
+        assert calls == [0]
+
+    def test_custom_recoverable_allowlist(self, tmp_path):
+        class FlakyStore(Exception):
+            pass
+
+        mgr = CheckpointManager(str(tmp_path))
+        fired = []
+
+        def step_fn(step, state):
+            if step == 2 and not fired:
+                fired.append(step)
+                raise FlakyStore("transient")
+            return {"x": state["x"] + 1.0}
+
+        final, stats = run_with_recovery(
+            step_fn, {"x": jnp.float32(0)}, 5, mgr,
+            recoverable=(FlakyStore,),
+        )
+        assert float(final["x"]) == 5.0
+        assert stats["restarts"] == 1
+
+    def test_scratch_restart_does_not_overcount_progress(self, tmp_path):
+        """Regression: a restart from the initial state (no checkpoint yet)
+        replays the prefix; completed_steps must count forward progress
+        once, with the replays tallied separately."""
+        mgr = CheckpointManager(str(tmp_path))
+        injector = FailureInjector(fail_at=[3])
+
+        def step_fn(step, state):
+            injector.check(step)
+            return {"x": state["x"] + 1.0}
+
+        final, stats = run_with_recovery(
+            step_fn, {"x": jnp.float32(0)}, 5, mgr, checkpoint_every=10
+        )
+        assert float(final["x"]) == 5.0
+        assert stats["scratch_restarts"] == 1
+        assert stats["completed_steps"] == 5  # not 5 + the replayed prefix
+        assert stats["replayed_steps"] == 3  # steps 0..2 re-run once
+
+    def test_backoff_grows_exponentially(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        injector = FailureInjector(fail_at=[1, 2])
+
+        def step_fn(step, state):
+            injector.check(step)
+            return {"x": state["x"] + 1.0}
+
+        _, stats = run_with_recovery(
+            step_fn, {"x": jnp.float32(0)}, 4, mgr,
+            backoff_base_s=0.01, backoff_cap_s=30.0,
+        )
+        assert stats["restarts"] == 2
+        # 0.01 * 2**0 + 0.01 * 2**1
+        assert stats["backoff_s"] == pytest.approx(0.03)
+
+    def test_backoff_respects_cap(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        injector = FailureInjector(fail_at=[1, 2, 3])
+
+        def step_fn(step, state):
+            injector.check(step)
+            return {"x": state["x"] + 1.0}
+
+        _, stats = run_with_recovery(
+            step_fn, {"x": jnp.float32(0)}, 5, mgr,
+            backoff_base_s=0.01, backoff_cap_s=0.015,
+        )
+        # 0.01, then 0.02 -> capped at 0.015, then 0.04 -> 0.015
+        assert stats["backoff_s"] == pytest.approx(0.04)
+
+
 class TestStragglers:
     def test_mask_respects_deadline(self):
         durations = np.array([1.0, 2.0, 50.0, 3.0])
@@ -91,6 +179,69 @@ class TestStragglers:
         xs = jnp.arange(6, dtype=jnp.float32)
         mask = jnp.array([1, 1, 0, 1, 0, 1], jnp.float32)
         np.testing.assert_allclose(f(xs, mask), (0 + 1 + 3 + 5) / 4.0)
+
+
+class TestStragglerEdgeCases:
+    def test_min_finishers_equal_n_is_synchronous(self):
+        """min_finishers == n keeps every group and waits for the slowest —
+        the synchronous limit."""
+        d = np.array([5.0, 50.0, 500.0])
+        mask = straggler_mask(d, deadline_s=1.0, min_finishers=3)
+        np.testing.assert_array_equal(mask, [1, 1, 1])
+        assert effective_round_time(d, 1.0, min_finishers=3) == 500.0
+
+    def test_min_finishers_clamped_to_cohort_size(self):
+        d = np.array([5.0, 50.0, 500.0])
+        big = straggler_mask(d, deadline_s=1.0, min_finishers=10)
+        exact = straggler_mask(d, deadline_s=1.0, min_finishers=3)
+        np.testing.assert_array_equal(np.asarray(big), np.asarray(exact))
+        assert effective_round_time(d, 1.0, min_finishers=10) == 500.0
+
+    def test_zero_min_finishers_means_no_floor(self):
+        d = np.array([1.0, 2.0, 50.0])
+        none = straggler_mask(d, deadline_s=10.0, min_finishers=None)
+        zero = straggler_mask(d, deadline_s=10.0, min_finishers=0)
+        np.testing.assert_array_equal(np.asarray(none), np.asarray(zero))
+
+    def test_all_groups_miss_deadline(self):
+        """Without a finisher floor an all-miss round yields the all-zero
+        mask and the round ends at the deadline (you waited it out)."""
+        d = np.array([20.0, 30.0, 40.0])
+        mask = straggler_mask(d, deadline_s=10.0)
+        np.testing.assert_array_equal(mask, [0, 0, 0])
+        assert effective_round_time(d, 10.0) == 10.0
+
+    def test_zero_weight_mask_composes_nan_free(self):
+        """The all-zero mask must flow through masked_reduce_mean as zeros,
+        not NaN — straggler_mask + masked reduction stay composable in the
+        worst case."""
+        from repro import core as drjax
+
+        @drjax.program(partition_size=3)
+        def f(xs, mask):
+            return drjax.masked_reduce_mean(xs, mask)
+
+        d = np.array([20.0, 30.0, 40.0])
+        mask = straggler_mask(d, deadline_s=10.0)
+        out = np.asarray(f(jnp.array([1.0, 2.0, 3.0]), mask))
+        np.testing.assert_array_equal(out, 0.0)
+
+    def test_min_finishers_floor_still_nan_free(self):
+        """min_finishers > 0 on an all-miss round extends the deadline, so
+        the mask is non-zero and the masked mean is over the k finishers."""
+        from repro import core as drjax
+
+        @drjax.program(partition_size=3)
+        def f(xs, mask):
+            return drjax.masked_reduce_mean(xs, mask)
+
+        d = np.array([20.0, 30.0, 40.0])
+        mask = straggler_mask(d, deadline_s=10.0, min_finishers=2)
+        np.testing.assert_array_equal(np.asarray(mask), [1, 1, 0])
+        np.testing.assert_allclose(
+            np.asarray(f(jnp.array([1.0, 2.0, 3.0]), mask)), 1.5
+        )
+        assert effective_round_time(d, 10.0, min_finishers=2) == 30.0
 
 
 class TestElastic:
