@@ -13,23 +13,40 @@ production metrics as a per-PR trajectory in ``BENCH_chaos.json``:
   under broken checkpoints;
 * ``oracle_bitwise_equal`` — determinism under recovery.
 
+* ``reshards`` / ``mesh_migrate_ms`` — physical-mode resharding (a real
+  degraded (pod, data) mesh rebuilt from surviving devices per elastic
+  event) and the cost of migrating server state onto it;
+* ``mid_write_kills_injected`` / ``mid_write_kills_survived`` — writer
+  killed mid-``arrays.npz``, survived via fallback restore;
+* ``serve_p99_contended`` — serve p99 while a training round is in flight
+  on the same devices (the co-location contention column).
+
 ``--smoke`` is the CI shape: ~20 rounds with 1 device failure, 1 elastic
 event, straggler deadlines every round and a checkpoint fault (no BENCH
-write). Invoked via ``benchmarks.run`` (key ``chaos``) or directly:
+write). ``--physical`` runs the physical-mesh soak; it needs 8 host
+devices and re-execs itself under ``XLA_FLAGS`` when the current process
+has fewer. Invoked via ``benchmarks.run`` (key ``chaos``) or directly:
 
-    PYTHONPATH=src python -m benchmarks.chaos [--smoke]
+    PYTHONPATH=src python -m benchmarks.chaos [--smoke] [--physical]
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 from repro.launch import bench_log
 from repro.runtime.chaos import ChaosConfig, run_chaos_soak
 
 OUT_PATH = bench_log.bench_path("chaos")
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: devices the physical soak needs (4 pods x 2 clients)
+PHYSICAL_DEVICES = 8
 
 
 def smoke_config(seed: int = 1) -> ChaosConfig:
@@ -52,22 +69,76 @@ def smoke_config(seed: int = 1) -> ChaosConfig:
     )
 
 
-def bench(smoke: bool = False, seed: int | None = None) -> dict:
-    if smoke:
+def physical_config(seed: int = 1) -> ChaosConfig:
+    """The 8-device physical-mesh soak: 4 pods x 2 clients on a real
+    (pod, data) mesh, 2 elastic events (>= 1 dropout reshard + >= 1
+    regrowth), 1 device failure and 1 mid-write checkpoint kill. Serve is
+    off (the logical full soak records the contention column)."""
+    return ChaosConfig(
+        rounds=20,
+        seed=seed,
+        num_pods=4,
+        clients_per_pod=2,
+        num_device_failures=1,
+        num_elastic_events=2,
+        num_ckpt_faults=1,
+        checkpoint_every=4,
+        audit_every=8,
+        serve_traffic=False,
+        physical_mesh=True,
+    )
+
+
+def bench(smoke: bool = False, seed: int | None = None,
+          physical: bool = False) -> dict:
+    if physical:
+        cfg = physical_config() if seed is None else physical_config(seed)
+    elif smoke:
         cfg = smoke_config() if seed is None else smoke_config(seed)
     else:
         cfg = ChaosConfig() if seed is None else ChaosConfig(seed=seed)
     report = run_chaos_soak(cfg)  # asserts the production invariants
     point = report.to_json()
-    point["mode"] = "smoke" if smoke else "full"
+    point["mode"] = (
+        "physical" if physical else ("smoke" if smoke else "full")
+    )
     return point
+
+
+def _physical_point_subprocess() -> dict:
+    """Run the physical soak in a fresh 8-device process, return its point.
+
+    The host device count is locked at JAX's first init, so the aggregator
+    (whose process typically has 1 device) gets the physical point from a
+    subprocess — the same pattern as benchmarks/hier_sharded.py."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={PHYSICAL_DEVICES}"
+    )
+    env["PYTHONPATH"] = os.path.join(_REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.chaos",
+         "--smoke", "--physical", "--json"],
+        capture_output=True, text=True, cwd=_REPO, timeout=900, env=env,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"physical chaos soak failed:\n{proc.stdout[-2000:]}\n"
+            f"{proc.stderr[-2000:]}"
+        )
+    return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
 def run():
     t0 = time.time()
     point = bench()
     point["bench_wall_s"] = round(time.time() - t0, 1)
-    bench_log.merge_entry({"chaos": point}, name="chaos")
+    phys = _physical_point_subprocess()
+    bench_log.merge_entry(
+        {"chaos": point, "chaos_physical": phys}, name="chaos"
+    )
     per_round_us = 1e6 * point["bench_wall_s"] / max(point["rounds"], 1)
     return [
         {
@@ -78,7 +149,20 @@ def run():
                 f"retraces={point['client_retraces']}; "
                 f"failures={point['device_failures']}; "
                 f"fallbacks={point['fallback_restores']}; "
-                f"straggler_speedup={point['straggler']['speedup']}"
+                f"straggler_speedup={point['straggler']['speedup']}; "
+                f"serve_p99_contended={point['serve_p99_contended']}"
+            ),
+        },
+        {
+            "name": "chaos_soak_physical",
+            "us_per_call": "-",
+            "derived": (
+                f"bitwise={phys['oracle_bitwise_equal']}; "
+                f"reshards={phys['reshards']}; "
+                f"mesh_migrate_ms={phys['mesh_migrate_ms']}; "
+                f"meshes={phys['meshes_seen']}; "
+                f"kills={phys['mid_write_kills_survived']}/"
+                f"{phys['mid_write_kills_injected']}"
             ),
         },
     ]
@@ -89,15 +173,43 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="~20-round CI soak (1 failure, 1 elastic event, "
                          "stragglers, 1 ckpt fault); no BENCH write")
+    ap.add_argument("--physical", action="store_true",
+                    help="physical-mesh soak (real (pod, data) mesh, live "
+                         "resharding); re-execs under XLA_FLAGS if this "
+                         f"process has < {PHYSICAL_DEVICES} devices")
+    ap.add_argument("--json", action="store_true",
+                    help="print the result as one machine-readable JSON line")
     ap.add_argument("--seed", type=int, default=None)
     args = ap.parse_args()
+    if args.physical:
+        import jax
+
+        if jax.device_count() < PHYSICAL_DEVICES:
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = (
+                "--xla_force_host_platform_device_count="
+                f"{PHYSICAL_DEVICES}"
+            )
+            env["PYTHONPATH"] = os.path.join(_REPO, "src") + (
+                os.pathsep + env["PYTHONPATH"]
+                if env.get("PYTHONPATH") else ""
+            )
+            sys.exit(subprocess.run(
+                [sys.executable, "-m", "benchmarks.chaos"] + sys.argv[1:],
+                cwd=_REPO, env=env,
+            ).returncode)
     t0 = time.time()
-    point = bench(smoke=args.smoke, seed=args.seed)
+    point = bench(smoke=args.smoke, seed=args.seed, physical=args.physical)
     point["bench_wall_s"] = round(time.time() - t0, 1)
     if not args.smoke:
-        bench_log.merge_entry({"chaos": point}, name="chaos")
-        print(f"wrote {OUT_PATH}")
-    print(json.dumps(point, indent=2))
+        key = "chaos_physical" if args.physical else "chaos"
+        bench_log.merge_entry({key: point}, name="chaos")
+        if not args.json:
+            print(f"wrote {OUT_PATH}")
+    if args.json:
+        print(json.dumps(point))
+    else:
+        print(json.dumps(point, indent=2))
 
 
 if __name__ == "__main__":

@@ -9,6 +9,11 @@ retraces, masked tail latency strictly below the synchronous baseline, and
 an unbiased masked mean. (~15 s on CPU.)
 
 Run:  PYTHONPATH=src python examples/chaos_soak.py [--rounds 48]
+      PYTHONPATH=src python examples/chaos_soak.py --minutes 5
+
+``--minutes`` replaces the fixed round count with a wall-clock budget: the
+soak times one calibration round, scales rounds (and fault counts,
+proportionally) to fill the budget, and then runs the scaled schedule.
 """
 
 import argparse
@@ -21,14 +26,25 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=48)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--minutes", type=float, default=None,
+                    help="wall-clock budget: calibrate one round, then "
+                         "scale rounds and fault counts to fill this many "
+                         "minutes (overrides --rounds)")
     args = ap.parse_args()
 
-    cfg = ChaosConfig(rounds=args.rounds, seed=args.seed)
-    schedule = ChaosSchedule.from_config(cfg)
-    print(f"schedule: failures at {schedule.failure_rounds}, "
-          f"elastic events {schedule.elastic_events}, "
-          f"checkpoint faults {schedule.ckpt_faults}, "
-          f"serve bursts at {schedule.serve_rounds}")
+    cfg = ChaosConfig(rounds=args.rounds, seed=args.seed,
+                      minutes=args.minutes)
+    if args.minutes is None:
+        schedule = ChaosSchedule.from_config(cfg)
+        print(f"schedule: failures at {schedule.failure_rounds}, "
+              f"elastic events {schedule.elastic_events}, "
+              f"checkpoint faults {schedule.ckpt_faults}, "
+              f"serve bursts at {schedule.serve_rounds}")
+    else:
+        # The schedule depends on the round count, which is unknown until
+        # the calibration round inside run_chaos_soak has been timed.
+        print(f"time-budgeted soak: calibrating to fill "
+              f"{args.minutes:g} min")
 
     # run_chaos_soak raises AssertionError if any invariant is violated
     report = run_chaos_soak(cfg)

@@ -120,4 +120,13 @@ echo "serve continuous-batching smoke check: OK"
 python -m benchmarks.chaos --smoke > /dev/null
 echo "chaos smoke soak: OK"
 
+# Physical chaos smoke: the same soak on a REAL 8-device (pod, data) mesh —
+# pod dropout rebuilds a degraded mesh from surviving devices, server state
+# migrates onto it, and a mid-arrays.npz writer kill must be survived via
+# fallback restore. --physical re-execs in a subprocess under
+# XLA_FLAGS=--xla_force_host_platform_device_count=8, so this process keeps
+# its single default device (same isolation rule as the conftest worker).
+python -m benchmarks.chaos --smoke --physical --json > /dev/null
+echo "physical chaos smoke soak: OK"
+
 exec python -m pytest -q "$@"

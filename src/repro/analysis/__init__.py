@@ -102,7 +102,9 @@ def analyze_plan(
     report.findings.extend(
         donation.analyze_donation(plan, donate_argnums=donate_argnums)
     )
-    report.findings.extend(retrace.analyze_retrace(plan))
+    report.findings.extend(
+        retrace.analyze_retrace(plan, donate_argnums=donate_argnums)
+    )
     if comm_cost:
         cost = commcost.estimate_comm_cost(plan)
         report.comm_cost = cost

@@ -21,7 +21,12 @@ sub-plans) and flags:
   the executable (it should probably be an input);
 * ``retrace/weak-type-input`` (info) — a weak-typed plan input: the aval
   cache key includes ``weak_type``, so alternating Python scalars and
-  arrays at the same position doubles the executable cache.
+  arrays at the same position doubles the executable cache;
+* ``retrace/mesh-keyed-leg`` (warning, needs ``donate_argnums``) — a
+  donated executable spanning >= 2 replica placement levels: its cache key
+  includes a mesh that elastic events (pod dropout/regrowth) resize, and
+  donated inputs cannot be replayed on the new mesh — split the round so
+  only the small cross-pod leg is donated (the elastic split).
 
 :func:`explain_fingerprint_mismatch` is the differential half: given two
 plans that *should* share an executable but do not, it pinpoints which
@@ -41,8 +46,27 @@ from .findings import Finding
 _LARGE_CONST_BYTES = 1 << 20
 
 
-def analyze_retrace(plan) -> List[Finding]:
+def analyze_retrace(plan, donate_argnums=()) -> List[Finding]:
     findings: List[Finding] = []
+    # A donated executable on a MULTI-level replica stack is keyed by a mesh
+    # that elastic events resize: donation invalidates the inputs, so after
+    # a pod dropout the old-mesh executable can neither be re-used nor its
+    # arguments replayed. The elastic split (runtime/executor.py:
+    # ElasticHierarchicalRound) exists for exactly this — donate only the
+    # small cross-pod leg and let it re-key per (avals, mesh).
+    n_replica_levels = sum(
+        1 for k in plan.placement_kinds if k != "stages"
+    )
+    if donate_argnums and n_replica_levels >= 2:
+        findings.append(Finding(
+            "retrace/mesh-keyed-leg", "warning",
+            f"plan donates argnums {tuple(donate_argnums)} but spans "
+            f"{n_replica_levels} replica placement levels: its executable "
+            f"is keyed by a mesh that elastic events (pod dropout/regrowth) "
+            f"can change, and donated buffers cannot be replayed on the new "
+            f"mesh — split the round so only the cross-pod leg is donated "
+            f"(see runtime.elastic.make_elastic_hierarchical_round)",
+        ))
     for pi, p in enumerate(interp._all_plans(plan)):
         where = "top-level plan" if pi == 0 else f"sub-plan {pi}"
         for ci, (atom, val) in enumerate(p.const_env().items()):

@@ -1,4 +1,4 @@
-"""Checkpoint manager: atomic, hashed, async, restart-safe.
+"""Checkpoint manager: atomic, hashed, async, crash-consistent, restart-safe.
 
 Layout per step::
 
@@ -6,28 +6,46 @@ Layout per step::
         manifest.json     # tree structure, shapes, dtypes, per-array sha256,
                           # user metadata (data-iterator state, rng, mesh)
         arrays.npz        # flattened leaves keyed by leaf index
-    <dir>/LATEST          # atomic pointer file (rename barrier)
+    <dir>/LATEST          # atomic commit pointer (rename barrier)
+
+Crash-consistency model (the write-ordering contract the mid-write kill
+tests sweep):
+
+ 1. every file is written into ``step_NNN.tmp`` and fsync'd (file + dir);
+ 2. the temp dir atomically renames to ``step_NNN`` (``os.replace``);
+ 3. ONLY THEN does LATEST advance (tmp file + fsync + ``os.replace``).
+
+LATEST is the commit point: ``restore_latest`` considers only complete
+steps at or below the step LATEST names, so a writer killed at ANY byte
+offset — mid-``arrays.npz``, mid-manifest, after the data but before the
+rename, or after the rename but before LATEST — can never surface a
+partially-renamed or uncommitted step. The fallback order is still
+newest-first below the pointer, skipping torn/corrupt dirs.
 
 Guarantees:
  * atomicity — a checkpoint becomes visible only after its directory is
-   complete (LATEST is updated last via os.replace);
+   complete AND LATEST has advanced past it;
  * integrity — every array carries a sha256; restore verifies;
  * async — ``save(..., blocking=False)`` hands the host copy to a writer
    thread, training continues (one outstanding write, back-pressure on the
    next save);
- * retention — ``keep_last_n`` garbage-collects old steps;
- * auto-resume — ``restore_latest()`` picks the newest complete checkpoint,
-   skipping torn ones.
+ * retention — ``keep_last_n`` garbage-collects old steps, but never the
+   newest cleanly-written one (a later faulted/killed write must not be
+   able to evict the only restorable state);
+ * auto-resume — ``restore_latest()`` picks the newest committed complete
+   checkpoint, skipping torn/corrupt ones.
 
-Chaos hooks: ``fault_hook(step) -> None | "torn" | "corrupt"`` is consulted
-once after every completed write and mutates the just-written checkpoint in
-place — ``"torn"`` simulates a crash between the array write and the
-manifest write (directory present, no manifest, stale LATEST), ``"corrupt"``
-a bit-flip on disk (valid npz, sha256 mismatch). Both states MUST be skipped
-by ``restore_latest`` in favor of the previous complete step — that
-skip-and-fall-back path is what the chaos soak (``runtime/chaos.py``)
-exercises under composed failures. ``inject_fault(step, kind)`` applies the
-same mutations to an already-written checkpoint (tests).
+Chaos hooks: ``fault_hook(step)`` is consulted once per ``save`` —
+``"torn"`` simulates a crash between the array write and the manifest write
+(directory present, no manifest, stale LATEST), ``"corrupt"`` a bit-flip on
+disk (valid npz, sha256 mismatch), and ``"kill@<bytes>"`` /
+``"kill@pre-rename"`` / ``"kill@pre-latest"`` terminate the async writer
+mid-write as if the process died (no error surfaces; see
+:meth:`CheckpointManager.kill_writer_at_byte`). Every state MUST be
+survived by ``restore_latest`` falling back to the previous committed step
+— that path is what the chaos soak (``runtime/chaos.py``) exercises under
+composed failures. ``inject_fault(step, kind)`` applies the torn/corrupt
+mutations to an already-written checkpoint (tests).
 """
 
 from __future__ import annotations
@@ -37,7 +55,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import numpy as np
@@ -47,8 +65,112 @@ def _leaf_key(i: int) -> str:
     return f"leaf_{i:05d}"
 
 
-#: Fault kinds ``fault_hook`` / ``inject_fault`` understand.
+#: Post-write fault kinds ``fault_hook`` / ``inject_fault`` understand.
+#: ``fault_hook`` may additionally return mid-write kill specs:
+#: ``"kill@<bytes>"``, ``"kill@pre-rename"``, ``"kill@pre-latest"``.
 FAULT_KINDS = ("torn", "corrupt")
+
+_KILL_PREFIX = "kill@"
+_KILL_PHASES = ("pre-rename", "pre-latest")
+
+
+class WriterKilled(BaseException):
+    """Simulated hard death of the checkpoint writer (SIGKILL mid-write).
+
+    Derives from ``BaseException`` so no ``except Exception`` cleanup path
+    can accidentally "handle" it: a killed process reports nothing,
+    surfaces no write error, and leaves whatever partial bytes were durable
+    at the moment of death. The write path catches exactly this class to
+    stop writing — the durability contract (temp dir + fsync + atomic
+    rename + LATEST-last) must make EVERY kill point recoverable.
+    """
+
+
+class _KillSwitchFile:
+    """File wrapper that terminates the writer after a byte budget.
+
+    Counts every byte written through it (across all files of one
+    checkpoint, in write order: ``arrays.npz`` then ``manifest.json``) and
+    raises :class:`WriterKilled` once the budget is exhausted — after
+    flushing the partial prefix, so the on-disk state is exactly "crashed
+    at byte N".
+    """
+
+    def __init__(self, raw, budget: List[int]):
+        self._raw = raw
+        self._budget = budget
+        # After the kill fires the wrapper goes dead-silent: a dead process
+        # neither writes nor errors, and zipfile's destructor must not trip
+        # on the closed underlying file.
+        self._dead = False
+
+    def write(self, data):
+        if self._dead:
+            return len(bytes(data))
+        b = bytes(data)
+        if self._budget[0] <= 0:
+            self._dead = True
+            raise WriterKilled("writer killed: byte budget exhausted")
+        if len(b) >= self._budget[0]:
+            n = self._budget[0]
+            self._budget[0] = 0
+            self._raw.write(b[:n])
+            self._raw.flush()
+            self._dead = True
+            raise WriterKilled(f"writer killed mid-write after {n} bytes")
+        self._budget[0] -= len(b)
+        return self._raw.write(b)
+
+    def seek(self, *args):
+        return 0 if self._dead else self._raw.seek(*args)
+
+    def tell(self):
+        return 0 if self._dead else self._raw.tell()
+
+    def flush(self):
+        return None if self._dead else self._raw.flush()
+
+    def __getattr__(self, name):
+        # full file-object duck typing (np.savez probes read/seekable/...)
+        return getattr(self._raw, name)
+
+
+def _parse_kill(spec: Union[int, str]):
+    """``"kill@256"`` -> 256; ``"kill@pre-rename"`` -> ``"pre-rename"``.
+
+    Bare ints and bare phase strings pass through (the
+    ``kill_writer_at_byte`` argument forms)."""
+    if isinstance(spec, int):
+        offset = spec
+    else:
+        arg = spec[len(_KILL_PREFIX):] if spec.startswith(_KILL_PREFIX) else spec
+        if arg in _KILL_PHASES:
+            return arg
+        try:
+            offset = int(arg)
+        except ValueError:
+            raise ValueError(
+                f"unknown checkpoint fault kind {spec!r}; expected one of "
+                f"{FAULT_KINDS}, 'kill@<bytes>', or 'kill@{{{'|'.join(_KILL_PHASES)}}}'"
+            ) from None
+    if offset < 0:
+        raise ValueError(f"kill offset must be >= 0, got {offset}")
+    return offset
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so renames/creates inside it are durable (no-op on
+    platforms whose directory fds reject fsync)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - exotic filesystems
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover - exotic filesystems
+        pass
+    finally:
+        os.close(fd)
 
 
 def _apply_fault(step_dir: str, kind: str) -> None:
@@ -94,6 +216,13 @@ class CheckpointManager:
         self._writer: Optional[threading.Thread] = None
         # (originating step, exception) — surfaced on the next save()/wait()
         self._write_error: Optional[Tuple[int, BaseException]] = None
+        # one-shot kill armed by kill_writer_at_byte for the NEXT save
+        self._armed_kill: Optional[Union[int, str]] = None
+        # step -> kill label, for every write that "died" mid-flight
+        self.killed_writes: Dict[int, str] = {}
+        # newest step THIS manager wrote cleanly (no fault, no kill): the
+        # GC floor — see _gc
+        self._last_good_step: Optional[int] = None
 
     # ------------------------------------------------------------------
     # save
@@ -102,9 +231,38 @@ class CheckpointManager:
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.directory, f"step_{step:09d}")
 
+    def kill_writer_at_byte(self, offset: Union[int, str]) -> None:
+        """Arm a one-shot mid-write kill for the NEXT :meth:`save`.
+
+        ``offset`` is a byte offset into the checkpoint's write stream
+        (``arrays.npz`` then ``manifest.json``, in write order) at which the
+        writer is terminated as if the process died: no error surfaces, the
+        partial bytes stay in the ``.tmp`` dir, the step never renames into
+        place and LATEST never advances. An offset at or past the end of
+        the stream kills immediately before the rename instead (an armed
+        kill ALWAYS prevents the commit — that totality is what makes
+        "restore survives every offset" a sweepable property). The special
+        phases ``"pre-rename"`` and ``"pre-latest"`` kill at the named
+        ordering point; ``"pre-latest"`` leaves a complete-but-uncommitted
+        step dir that ``restore_latest`` must ignore.
+
+        Killed writes are recorded in ``killed_writes`` (step -> label) for
+        the chaos soak's accounting; they are deliberately NOT surfaced as
+        write errors — a dead process reports nothing.
+        """
+        self._armed_kill = _parse_kill(offset)
+
     def save(self, step: int, tree: Any, metadata: Optional[dict] = None,
              blocking: bool = True) -> None:
         self.wait()  # back-pressure: one outstanding async write
+        # Fault decision happens here, deterministically, before the writer
+        # thread starts: torn/corrupt mutate the completed write as before;
+        # kill specs arm the mid-write kill switch.
+        fault = self.fault_hook(step) if self.fault_hook else None
+        kill = self._armed_kill
+        self._armed_kill = None
+        if fault is not None and str(fault).startswith(_KILL_PREFIX):
+            kill, fault = _parse_kill(str(fault)), None
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         host_leaves = []
         leaf_dtypes = []
@@ -122,8 +280,16 @@ class CheckpointManager:
                 if os.path.exists(tmp):
                     shutil.rmtree(tmp)
                 os.makedirs(tmp)
+                budget = [kill] if isinstance(kill, int) else None
+
+                def _out(raw):
+                    return _KillSwitchFile(raw, budget) if budget else raw
+
                 arrays = {_leaf_key(i): l for i, l in enumerate(host_leaves)}
-                np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+                with open(os.path.join(tmp, "arrays.npz"), "wb") as raw:
+                    np.savez(_out(raw), **arrays)
+                    raw.flush()
+                    os.fsync(raw.fileno())
                 manifest = {
                     "step": step,
                     "treedef": treedef_repr,
@@ -140,22 +306,45 @@ class CheckpointManager:
                     ],
                     "metadata": metadata or {},
                 }
-                with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                    json.dump(manifest, f)
+                with open(os.path.join(tmp, "manifest.json"), "wb") as raw:
+                    _out(raw).write(json.dumps(manifest).encode("utf-8"))
+                    raw.flush()
+                    os.fsync(raw.fileno())
+                _fsync_dir(tmp)
+                if budget is not None and budget[0] > 0:
+                    # the byte budget outlived the whole stream: an armed
+                    # kill must still prevent the commit
+                    raise WriterKilled("writer killed before step-dir rename")
+                if kill == "pre-rename":
+                    raise WriterKilled("writer killed before step-dir rename")
                 final = self._step_dir(step)
                 if os.path.exists(final):
                     shutil.rmtree(final)
                 os.replace(tmp, final)
-                fault = self.fault_hook(step) if self.fault_hook else None
+                _fsync_dir(self.directory)
                 if fault is not None:
                     _apply_fault(final, fault)
+                if kill == "pre-latest":
+                    raise WriterKilled(
+                        "writer killed after rename, before LATEST advanced"
+                    )
                 if fault != "torn":
-                    # atomic LATEST pointer (a torn write crashed before it)
+                    # atomic LATEST pointer, advanced LAST: the commit point
+                    # (a torn write crashed before it)
                     ptr_tmp = os.path.join(self.directory, ".LATEST.tmp")
                     with open(ptr_tmp, "w") as f:
                         f.write(os.path.basename(final))
+                        f.flush()
+                        os.fsync(f.fileno())
                     os.replace(ptr_tmp, os.path.join(self.directory, "LATEST"))
+                    _fsync_dir(self.directory)
+                if fault is None:
+                    self._last_good_step = step
                 self._gc()
+            except WriterKilled as e:
+                # a dead writer reports nothing — record for introspection
+                # only, never surface as a write error
+                self.killed_writes[step] = str(e)
             except BaseException as e:  # surfaced on next save()/wait()
                 self._write_error = (step, e)
 
@@ -191,9 +380,21 @@ class CheckpointManager:
         _apply_fault(self._step_dir(step), kind)
 
     def _gc(self) -> None:
+        # Keep the newest keep_last_n complete steps — but NEVER the newest
+        # cleanly-written one or the step LATEST commits to, even when later
+        # faulted/killed writes pushed them past the keep budget (a faulted
+        # dir counting toward the budget must not evict the only restorable
+        # state).
         steps = sorted(self._complete_steps())
-        for s in steps[: -self.keep_last_n]:
-            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        keep = set(steps[-self.keep_last_n:]) if self.keep_last_n > 0 else set()
+        if self._last_good_step is not None:
+            keep.add(self._last_good_step)
+        target = self._latest_target()
+        if target is not None:
+            keep.add(target)
+        for s in steps:
+            if s not in keep:
+                shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     # ------------------------------------------------------------------
     # restore
@@ -210,8 +411,29 @@ class CheckpointManager:
                 out.append(int(name.split("_")[1]))
         return out
 
+    def _latest_target(self) -> Optional[int]:
+        """The step LATEST commits to, or None when no commit has happened.
+
+        Robust to a missing/garbled pointer (treated as "nothing committed"
+        — the pre-commit crash states)."""
+        try:
+            with open(os.path.join(self.directory, "LATEST")) as f:
+                name = f.read().strip()
+            return int(name.split("_")[1])
+        except (OSError, IndexError, ValueError):
+            return None
+
     def latest_step(self) -> Optional[int]:
-        steps = self._complete_steps()
+        """Newest complete step at or below the LATEST commit point.
+
+        A step dir that exists but was never committed (writer killed after
+        the rename, before LATEST advanced) is invisible here — restoring
+        it could silently resume from state whose write was never
+        acknowledged."""
+        target = self._latest_target()
+        if target is None:
+            return None
+        steps = [s for s in self._complete_steps() if s <= target]
         return max(steps) if steps else None
 
     def restore(self, step: int, example_tree: Any,
@@ -250,7 +472,12 @@ class CheckpointManager:
     def restore_latest(self, example_tree: Any,
                        verify: bool = True) -> Optional[Tuple[int, Any, dict]]:
         self.wait()
-        steps = sorted(self._complete_steps(), reverse=True)
+        target = self._latest_target()
+        if target is None:
+            return None
+        steps = sorted(
+            (s for s in self._complete_steps() if s <= target), reverse=True
+        )
         for s in steps:
             try:
                 tree, meta = self.restore(s, example_tree, verify=verify)

@@ -148,7 +148,7 @@ def placement_axes_for(
 
 
 def mesh_for_placements(
-    placements, model_parallel: int = 1
+    placements, model_parallel: int = 1, *, devices=None
 ) -> jax.sharding.Mesh:
     """A mesh with one device axis per placement (plus optional "model").
 
@@ -160,7 +160,14 @@ def mesh_for_placements(
     stage-kind level (pass a ``PlacementContext`` or ``(name, size, kind)``
     tuples) owns a ``"stage"`` axis — see :func:`level_axes_for` for the
     naming rule. Device count must equal the product (use the dry-run
-    driver's fake devices, or shrink the placements)."""
+    driver's fake devices, or shrink the placements).
+
+    ``devices``: an explicit device subset (flat sequence or array, length
+    equal to the stack product incl. model parallelism) to build the mesh
+    from instead of the full ``jax.devices()`` pool. This is the elastic
+    re-mapping path: after a pod drops out, pass the SURVIVING devices and
+    the shrunken stack and the same N-level factorization lands on them —
+    the degraded ``(pod, data)`` mesh the chaos soak reshards onto."""
     stack = _normalize_stack(placements)
     if not stack:
         raise ValueError("placements must not be empty")
@@ -169,4 +176,17 @@ def mesh_for_placements(
     if model_parallel > 1:
         shape = shape + (model_parallel,)
         axes = axes + ("model",)
+    if devices is not None:
+        import numpy as np
+
+        flat = list(np.asarray(devices, dtype=object).reshape(-1))
+        need = 1
+        for s in shape:
+            need *= s
+        if len(flat) != need:
+            raise ValueError(
+                f"devices subset has {len(flat)} devices but the placement "
+                f"stack needs {need} (shape {shape})"
+            )
+        return compat.make_mesh(shape, axes, devices=flat)
     return compat.make_mesh(shape, axes)

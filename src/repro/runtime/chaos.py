@@ -26,7 +26,24 @@ and asserts the system's production invariants as hard checks:
 * **serve isolation** — concurrent bursts through
   :class:`~repro.launch.serve.ContinuousBatchingScheduler` complete every
   request (surviving an injected scheduler fault via
-  ``reset_slots`` + resubmit) with trace counts flat after warmup.
+  ``reset_slots`` + resubmit) with trace counts flat after warmup; bursts
+  are dispatched while the training round is still in flight, and their
+  completion latencies are recorded as the ``serve_p99_contended`` column;
+* **crash-consistent checkpointing** — the fault cycle includes mid-write
+  writer kills (``kill@<bytes>`` at a seeded offset inside ``arrays.npz``);
+  every kill must be survived by a fallback restore strictly below the
+  killed step (``mid_write_kills_survived == mid_write_kills_injected``);
+* **physical resharding** (``physical_mesh=True``, needs ``num_pods *
+  clients_per_pod`` devices, e.g. a ``REPRO_HOST_DEVICES=8`` worker) — the
+  soak runs on a real ``(pod, data)`` mesh; every pod dropout/regrowth
+  rebuilds a degraded mesh from the surviving devices and migrates the
+  server state onto it (``reshards``/``mesh_migrate_ms``), with exactly one
+  cross-pod executable per distinct mesh.
+
+``ChaosConfig(minutes=N)`` replaces the fixed round count with a wall-clock
+budget: a probe round is timed (:func:`_calibrate_round_s`) and the
+schedule rescaled (:func:`scale_config_to_minutes`) so the soak fills ~N
+minutes with proportionally scaled fault counts.
 
 Seeding rule (ROADMAP "Chaos soak"): every chaos stream derives from
 ``np.random.SeedSequence([seed, stream_id, ...])`` so streams are
@@ -69,6 +86,7 @@ STREAM_FAILURES = 1
 STREAM_ELASTIC = 2
 STREAM_DATA = 3
 STREAM_SERVE = 4
+STREAM_CKPT = 5
 
 
 def _rng(*ids: int) -> np.random.Generator:
@@ -124,6 +142,16 @@ class ChaosConfig:
     # audits
     audit_every: int = 12
 
+    # physical elasticity: run the masked elastic round on a real
+    # (pod, data) mesh over this host's devices so pod dropout exercises
+    # live resharding (needs num_pods * clients_per_pod devices, e.g. a
+    # REPRO_HOST_DEVICES=8 device-pool worker)
+    physical_mesh: bool = False
+
+    # time budget: scale the schedule to ~N minutes of wall clock instead
+    # of a fixed round count (calibrated from a probe round at soak start)
+    minutes: Optional[float] = None
+
     def validate(self) -> None:
         if self.rounds < 8:
             raise ValueError(f"need rounds >= 8 for a soak, got {self.rounds}")
@@ -153,7 +181,8 @@ class ChaosSchedule:
                  ckpt_faults: Dict[int, str],
                  serve_rounds: Tuple[int, ...],
                  serve_fault_round: Optional[int],
-                 audit_rounds: frozenset):
+                 audit_rounds: frozenset,
+                 alive_pods: Optional[Tuple[Tuple[int, ...], ...]] = None):
         self.cfg = cfg
         self.pod_counts = pod_counts
         self.elastic_events = elastic_events  # (round, old_pods, new_pods)
@@ -162,6 +191,12 @@ class ChaosSchedule:
         self.serve_rounds = serve_rounds
         self.serve_fault_round = serve_fault_round
         self.audit_rounds = audit_rounds
+        # which pod IDS are alive each round — the physical identity a real
+        # mesh reshard needs (pod_counts alone can't say WHICH pod died).
+        # Default (logical schedules): the leading pods.
+        self.alive_pods = alive_pods or tuple(
+            tuple(range(p)) for p in pod_counts
+        )
         self._sim = StragglerSimulator(
             median_s=cfg.straggler_median_s,
             sigma=cfg.straggler_sigma,
@@ -185,6 +220,8 @@ class ChaosSchedule:
         ) if k else set()
         pods: List[int] = []
         events: List[Tuple[int, int, int]] = []
+        alive_per_round: List[Tuple[int, ...]] = []
+        alive = list(range(cfg.num_pods))
         cur, drop_next = cfg.num_pods, True
         for r in range(cfg.rounds):
             if r in event_at:
@@ -198,7 +235,18 @@ class ChaosSchedule:
                 drop_next = not drop_next
                 if cur != old:
                     events.append((r, old, cur))
+                    # pod-identity draws come AFTER the event_at choice on
+                    # the same stream, so pod_counts/events of existing
+                    # recorded schedules are unchanged
+                    if cur < old:  # dropout: pick the victim
+                        victim = alive[int(rng.integers(len(alive)))]
+                        alive.remove(victim)
+                    else:  # regrowth: revive a dead pod
+                        dead = sorted(set(range(cfg.num_pods)) - set(alive))
+                        alive.append(dead[int(rng.integers(len(dead)))])
+                        alive.sort()
             pods.append(cur)
+            alive_per_round.append(tuple(alive))
 
         # --- device failures: distinct rounds in [1, rounds) ---
         rng = _rng(cfg.seed, STREAM_FAILURES)
@@ -215,14 +263,22 @@ class ChaosSchedule:
         # --- checkpoint faults: break the checkpoint a failure will want.
         # For each failure round r, the restore target is the last
         # checkpoint step <= r; faulting exactly that step guarantees the
-        # skip-and-fall-back path runs under real recovery pressure.
+        # skip-and-fall-back path runs under real recovery pressure. Kinds
+        # cycle mid-write kill / corrupt / torn — the kill offset (drawn
+        # from its own stream) lands inside arrays.npz so the writer dies
+        # with bytes in flight.
+        ckpt_rng = _rng(cfg.seed, STREAM_CKPT)
         faults: Dict[int, str] = {}
         for r in failure_rounds:
             if len(faults) >= cfg.num_ckpt_faults:
                 break
             s = (r // cfg.checkpoint_every) * cfg.checkpoint_every
             if s >= cfg.checkpoint_every and s not in faults:
-                faults[s] = ("corrupt", "torn")[len(faults) % 2]
+                i = len(faults)
+                if i % 3 == 0:
+                    faults[s] = f"kill@{int(ckpt_rng.integers(64, 2048))}"
+                else:
+                    faults[s] = ("corrupt", "torn")[i % 3 - 1]
 
         # --- serve bursts + one scheduler-level fault ---
         serve_rounds: Tuple[int, ...] = ()
@@ -240,7 +296,8 @@ class ChaosSchedule:
         } | {r for (r, _, _) in events}
 
         return cls(cfg, tuple(pods), tuple(events), failure_rounds, faults,
-                   serve_rounds, serve_fault_round, frozenset(audits))
+                   serve_rounds, serve_fault_round, frozenset(audits),
+                   alive_pods=tuple(alive_per_round))
 
     # ------------------------------------------------------------------
     # per-round accessors (pure in (seed, round))
@@ -313,6 +370,14 @@ class ChaosReport:
     client_retraces: int
     cross_compiles: int
     oracle_extra_traces: int
+    # physical resharding (all zero/False in logical mode)
+    physical_mesh: bool
+    reshards: int
+    mesh_migrate_ms: float
+    meshes_seen: int
+    # mid-write checkpoint kills
+    mid_write_kills_injected: int
+    mid_write_kills_survived: int
     # stragglers
     straggler: Dict[str, float]
     # unbiasedness
@@ -323,6 +388,10 @@ class ChaosReport:
     # the verdict input
     oracle_bitwise_equal: bool
     serve: Optional[Dict[str, Any]]
+    # serve p99 while a training round is in flight on the same devices
+    # (None when serve traffic is off)
+    serve_p99_contended: Optional[float]
+    minutes_budget: Optional[float]
     wall_s: float
 
     def to_json(self) -> dict:
@@ -376,6 +445,25 @@ class ChaosReport:
                 "checkpoint faults were injected but no restore fell back "
                 "past a broken checkpoint"
             )
+        if self.mid_write_kills_survived < self.mid_write_kills_injected:
+            errs.append(
+                f"only {self.mid_write_kills_survived}/"
+                f"{self.mid_write_kills_injected} mid-write checkpoint kills "
+                "were survived via fallback restore"
+            )
+        if self.physical_mesh:
+            if self.reshards < len(self.elastic_events):
+                errs.append(
+                    f"only {self.reshards} physical reshards for "
+                    f"{len(self.elastic_events)} elastic events (every pod "
+                    "change must re-map the mesh)"
+                )
+            if self.cross_compiles != self.meshes_seen:
+                errs.append(
+                    "cross-pod executable count != distinct meshes "
+                    f"({self.cross_compiles} != {self.meshes_seen}): the "
+                    "cache must hold exactly one executable per mesh"
+                )
         if self.serve is not None:
             if not self.serve["flat_traces"]:
                 errs.append("serve traces grew after the warmup burst")
@@ -413,6 +501,47 @@ def _init_state(cfg: ChaosConfig, server_opt):
 def _percentiles(values: List[float]) -> Tuple[float, float]:
     a = np.asarray(values, np.float64)
     return float(np.percentile(a, 50)), float(np.percentile(a, 99))
+
+
+def _calibrate_round_s(run_round) -> float:
+    """Seconds per training round: one warmup (compile), two timed runs.
+
+    Module-level so tests can monkeypatch it (a fake calibration makes
+    ``minutes`` scaling deterministic)."""
+    run_round()
+    t0 = time.perf_counter()
+    run_round()
+    run_round()
+    return max((time.perf_counter() - t0) / 2.0, 1e-4)
+
+
+def scale_config_to_minutes(cfg: ChaosConfig, round_s: float) -> ChaosConfig:
+    """Rescale a soak config to a ~``cfg.minutes`` wall-clock budget.
+
+    Pure in ``(cfg, round_s)``: rounds become ``minutes * 60 / round_s``
+    (floor 8 — the minimum ``validate`` accepts), fault counts scale
+    proportionally (floor 1 for any fault class the template enabled), and
+    ``max_restarts`` grows to keep headroom over the scaled failure count.
+    ``minutes`` is cleared on the result so the scaling never re-triggers.
+    """
+    if cfg.minutes is None:
+        return cfg
+    target = max(8, int(round(cfg.minutes * 60.0 / round_s)))
+    factor = target / max(cfg.rounds, 1)
+
+    def scaled(n: int) -> int:
+        return max(1, int(round(n * factor))) if n > 0 else 0
+
+    nf = scaled(cfg.num_device_failures)
+    return dataclasses.replace(
+        cfg,
+        rounds=target,
+        num_device_failures=nf,
+        num_elastic_events=scaled(cfg.num_elastic_events),
+        num_ckpt_faults=scaled(cfg.num_ckpt_faults),
+        max_restarts=max(cfg.max_restarts, nf + 2),
+        minutes=None,
+    )
 
 
 class _ServeTraffic:
@@ -467,6 +596,10 @@ class _ServeTraffic:
             "recoveries": 0,
         }
         self._done_rids: Dict[int, set] = {}
+        # per-round completion latencies (scheduler clock, arrival 0).
+        # Bursts are dispatched while a training round is still in flight
+        # on the same devices, so these ARE the contended latencies.
+        self._latencies: Dict[int, List[float]] = {}
 
     def burst(self, r: int, schedule: ChaosSchedule) -> None:
         reqs = schedule.serve_requests_for(r, self.scfg.vocab_size)
@@ -497,10 +630,17 @@ class _ServeTraffic:
             raise RuntimeError("serve burst failed to recover after retries")
         # replay of a burst overwrites its per-round completion record
         self._done_rids[r] = {q.rid for q in all_objs if q.done}
+        self._latencies[r] = [
+            float(q.t_done) for q in all_objs
+            if q.done and q.t_done is not None
+        ]
 
     def report(self, num_rounds_requests: int) -> Dict[str, Any]:
         now = (self.sched.prefill_traces, self.sched.decode_traces)
         completed = sum(len(s) for s in self._done_rids.values())
+        lats = [t for r in sorted(self._latencies)
+                for t in self._latencies[r]]
+        p50, p99 = _percentiles(lats) if lats else (0.0, 0.0)
         return {
             "bursts": self.stats["bursts"],
             "requests": num_rounds_requests,
@@ -510,6 +650,8 @@ class _ServeTraffic:
             "prefill_traces": now[0],
             "decode_traces": now[1],
             "flat_traces": now == self.warm_traces,
+            "p50_contended_s": round(p50, 4),
+            "p99_contended_s": round(p99, 4),
         }
 
 
@@ -522,12 +664,39 @@ def run_chaos_soak(cfg: Optional[ChaosConfig] = None, *,
     from repro.algorithms.rounds import LocalSGDConfig, make_local_sgd_round
     from repro.optim.optimizers import sgd
     from repro.optim.server import fedavg_momentum
-    from repro.runtime.elastic import make_elastic_hierarchical_round
+    from repro.runtime.elastic import (
+        make_elastic_hierarchical_round,
+        mesh_for_surviving_pods,
+        pod_device_pool,
+    )
 
     t_start = time.time()
     cfg = cfg or ChaosConfig()
-    schedule = ChaosSchedule.from_config(cfg)
     C = cfg.clients_per_pod
+
+    # --- physical elasticity: a real (pod, data) mesh per alive-set -----
+    pool = None
+    if cfg.physical_mesh:
+        need = cfg.num_pods * C
+        if jax.device_count() < need:
+            raise RuntimeError(
+                f"physical_mesh soak needs {need} devices "
+                f"({cfg.num_pods} pods x {C} clients) but this process has "
+                f"{jax.device_count()}; launch with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={need} (CPU) or on "
+                "a large-enough accelerator worker"
+            )
+        pool = pod_device_pool(cfg.num_pods, C)
+    mesh_cache: Dict[Tuple[int, ...], Any] = {}
+
+    def mesh_for(alive: Tuple[int, ...]):
+        # one Mesh OBJECT per alive-set for the whole soak (oracle replay
+        # included), so the executor's mesh-keyed caches get stable keys
+        if pool is None:
+            return None
+        if alive not in mesh_cache:
+            mesh_cache[alive] = mesh_for_surviving_pods(pool, alive)
+        return mesh_cache[alive]
 
     client_opt = sgd(cfg.client_lr)
     server_opt = fedavg_momentum(1.0, momentum=cfg.server_momentum)
@@ -540,6 +709,35 @@ def run_chaos_soak(cfg: Optional[ChaosConfig] = None, *,
         _loss_fn, client_opt, server_opt, round_cfg, straggler_mask=True
     )
     init_state = _init_state(cfg, server_opt)
+
+    # --- time budget: calibrate a probe round, rescale the schedule -----
+    minutes_budget = cfg.minutes
+    if cfg.minutes is not None:
+        rng_p = _rng(cfg.seed, STREAM_DATA, 0)
+        shape = (cfg.num_pods, C, cfg.local_steps, cfg.batch)
+        probe_batch = {
+            "data": (
+                jnp.asarray(
+                    rng_p.standard_normal(shape + (cfg.dim,)).astype(np.float32)
+                ),
+                jnp.asarray(rng_p.standard_normal(shape).astype(np.float32)),
+            ),
+            # all-finishers mask, same dtype/shape as the soak's masks so the
+            # calibration warmup IS the per-client leg's one compile
+            "mask": jnp.ones((cfg.num_pods, C), jnp.float32),
+        }
+        probe_mesh = mesh_for(tuple(range(cfg.num_pods)))
+
+        def probe_round():
+            _, _, m = elastic.step(
+                init_state["params"], init_state["server"], probe_batch,
+                mesh=probe_mesh,
+            )
+            float(m["loss"])
+
+        cfg = scale_config_to_minutes(cfg, _calibrate_round_s(probe_round))
+
+    schedule = ChaosSchedule.from_config(cfg)
 
     # flat masked reference rounds for the unbiasedness audits, one per
     # distinct cohort size (jit cached; state NOT donated — reference reuse)
@@ -571,17 +769,9 @@ def run_chaos_soak(cfg: Optional[ChaosConfig] = None, *,
     mgr = CheckpointManager(
         ckpt_dir, keep_last_n=cfg.keep_last_n, fault_hook=ckpt_fault_hook
     )
-    # log every restore_latest outcome (restored step, None for scratch);
-    # entry 0 is the startup probe
+    # every recovery's restored step (None for a from-scratch restart),
+    # observed through run_with_recovery's on_recovery hook
     recovery_log: List[Optional[int]] = []
-    orig_restore_latest = mgr.restore_latest
-
-    def logged_restore_latest(example, verify=True):
-        out = orig_restore_latest(example, verify=verify)
-        recovery_log.append(None if out is None else out[0])
-        return out
-
-    mgr.restore_latest = logged_restore_latest
 
     injector = FailureInjector(schedule.failure_rounds)
     fired_failures: List[int] = []
@@ -608,8 +798,14 @@ def run_chaos_soak(cfg: Optional[ChaosConfig] = None, *,
         masked_t[r], sync_t[r] = mt, st_
         batch = {"data": (x, y), "mask": mask}
         params, server, metrics = elastic.step(
-            state["params"], state["server"], batch
+            state["params"], state["server"], batch,
+            mesh=mesh_for(schedule.alive_pods[r]),
         )
+        if serve is not None and r in schedule.serve_rounds:
+            # dispatch the burst BEFORE syncing on the training loss: the
+            # async-dispatched round is still in flight on the same devices,
+            # so these latencies measure co-located contention
+            serve.burst(r, schedule)
         losses[r] = float(metrics["loss"])
         if r in schedule.audit_rounds:
             n = p * C
@@ -626,8 +822,6 @@ def run_chaos_soak(cfg: Optional[ChaosConfig] = None, *,
                 params, ref_p,
             )
             audit_errs[r] = max(jax.tree_util.tree_leaves(errs))
-        if serve is not None and r in schedule.serve_rounds:
-            serve.burst(r, schedule)
         return {"params": params, "server": server}
 
     final_state, stats = run_with_recovery(
@@ -639,16 +833,41 @@ def run_chaos_soak(cfg: Optional[ChaosConfig] = None, *,
         max_restarts=cfg.max_restarts,
         recoverable=DEFAULT_RECOVERABLE,
         backoff_base_s=cfg.backoff_base_s,
+        on_recovery=lambda _i, s: recovery_log.append(s),
     )
 
     # --- fallback accounting: a recovery fell back iff it restored below
     # (or from scratch instead of) the newest checkpoint its failure round
     # implies must exist ---
     fallbacks = 0
-    for r, s in zip(fired_failures, recovery_log[1:]):
+    for r, s in zip(fired_failures, recovery_log):
         expected = (r // cfg.checkpoint_every) * cfg.checkpoint_every
         if expected > 0 and (s is None or s < expected):
             fallbacks += 1
+
+    # --- mid-write kill accounting: every injected kill must have been
+    # survived — its step never committed, the manager recorded the death,
+    # and the failure that wanted that checkpoint restored strictly below
+    # it (or from scratch) ---
+    kill_steps = sorted(
+        s for s, k in injected_faults.items() if k.startswith("kill@")
+    )
+    kills_survived = 0
+    for s in kill_steps:
+        died = s in mgr.killed_writes
+        fell_back = any(
+            (r // cfg.checkpoint_every) * cfg.checkpoint_every == s
+            and (rest is None or rest < s)
+            for r, rest in zip(fired_failures, recovery_log)
+        )
+        if died and fell_back:
+            kills_survived += 1
+
+    # physical reshard counters: snapshot BEFORE the oracle replay (the
+    # replay re-adopts every mesh and would double-count migrations)
+    reshards = elastic.reshard_count
+    mesh_migrate_ms = elastic.mesh_migrate_ms
+    meshes_seen = elastic.meshes_seen
 
     # --- oracle: the same schedule, uninterrupted, on the SAME executor —
     # must add zero traces and reproduce the final state bitwise ---
@@ -660,7 +879,9 @@ def run_chaos_soak(cfg: Optional[ChaosConfig] = None, *,
         x, y = schedule.data_for_round(r, p)
         mask, _, _ = schedule.round_mask_and_times(r, p)
         pp, ss, _ = elastic.step(
-            o_state["params"], o_state["server"], {"data": (x, y), "mask": mask}
+            o_state["params"], o_state["server"],
+            {"data": (x, y), "mask": mask},
+            mesh=mesh_for(schedule.alive_pods[r]),
         )
         o_state = {"params": pp, "server": ss}
     oracle_extra = (elastic.client_trace_count - traces_before) + (
@@ -676,6 +897,11 @@ def run_chaos_soak(cfg: Optional[ChaosConfig] = None, *,
 
     mp50, mp99 = _percentiles([masked_t[r] for r in sorted(masked_t)])
     sp50, sp99 = _percentiles([sync_t[r] for r in sorted(sync_t)])
+    serve_report = (
+        serve.report(len(schedule.serve_rounds) * cfg.serve_requests)
+        if serve is not None
+        else None
+    )
     report = ChaosReport(
         rounds=cfg.rounds,
         seed=cfg.seed,
@@ -686,7 +912,7 @@ def run_chaos_soak(cfg: Optional[ChaosConfig] = None, *,
         backoff_s=stats["backoff_s"],
         device_failures=injector.failures,
         failure_rounds=tuple(fired_failures),
-        restores=tuple(recovery_log[1:]),
+        restores=tuple(recovery_log),
         fallback_restores=fallbacks,
         ckpt_faults_injected=dict(injected_faults),
         elastic_events=schedule.elastic_events,
@@ -695,6 +921,12 @@ def run_chaos_soak(cfg: Optional[ChaosConfig] = None, *,
         client_retraces=max(0, elastic.client_trace_count - 1),
         cross_compiles=elastic.cross_compile_count,
         oracle_extra_traces=oracle_extra,
+        physical_mesh=cfg.physical_mesh,
+        reshards=reshards,
+        mesh_migrate_ms=round(mesh_migrate_ms, 3),
+        meshes_seen=meshes_seen,
+        mid_write_kills_injected=len(kill_steps),
+        mid_write_kills_survived=kills_survived,
         straggler={
             "p50_masked_s": round(mp50, 4),
             "p99_masked_s": round(mp99, 4),
@@ -713,11 +945,11 @@ def run_chaos_soak(cfg: Optional[ChaosConfig] = None, *,
         loss_first=losses.get(0, float("nan")),
         loss_final=losses.get(cfg.rounds - 1, float("nan")),
         oracle_bitwise_equal=bool(bitwise),
-        serve=(
-            serve.report(len(schedule.serve_rounds) * cfg.serve_requests)
-            if serve is not None
-            else None
+        serve=serve_report,
+        serve_p99_contended=(
+            serve_report["p99_contended_s"] if serve_report else None
         ),
+        minutes_budget=minutes_budget,
         wall_s=round(time.time() - t_start, 2),
     )
     if check:

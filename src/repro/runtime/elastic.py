@@ -188,23 +188,108 @@ def make_elastic_hierarchical_round(
 
 
 def available_mesh_shapes(num_devices: int,
-                          model_parallelism: int) -> List[Tuple[int, int]]:
-    """All viable (data, model) mesh shapes for a (possibly degraded) pool.
+                          model_parallelism: int = 1,
+                          *,
+                          placements=None) -> List:
+    """All viable mesh shapes for a (possibly degraded) device pool.
 
     Tries the requested model parallelism first, then every halved fallback
     down to 1, keeping each shape that tiles the device pool exactly. The
     first entry is the preferred shape; later entries trade model parallelism
     for data parallelism (useful when the degraded pool can't tile the
     original model-parallel group).
+
+    Legacy form (``placements=None``): returns ``(data, model)`` int pairs
+    for a flat pool — unchanged historical behavior.
+
+    With ``placements`` (any spec :func:`repro.launch.mesh.level_axes_for`
+    accepts): the N-level generalization. Every level but the OUTERMOST
+    keeps its size (the inner levels are fast-interconnect groups a dropout
+    does not re-tile); the outermost level absorbs the degraded pool. Each
+    entry is ``(shape, axes)`` with axis names from ``level_axes_for`` — the
+    axis-tuple literals stay in ``launch/mesh.py`` so the
+    ``mesh-axes-literal`` lint covers this path too.
     """
-    shapes: List[Tuple[int, int]] = []
+    if placements is None:
+        shapes: List[Tuple[int, int]] = []
+        mp = model_parallelism
+        while mp >= 1:
+            if num_devices % mp == 0:
+                shape = (num_devices // mp, mp)
+                if shape not in shapes:
+                    shapes.append(shape)
+            if mp == 1:
+                break
+            mp //= 2
+        return shapes
+
+    from repro.launch.mesh import _normalize_stack, level_axes_for
+
+    stack = _normalize_stack(placements)
+    if not stack:
+        raise ValueError("placements must not be empty")
+    level_axes = level_axes_for(stack)
+    inner_sizes = tuple(s for _, s, _ in stack[1:])
+    inner = 1
+    for s in inner_sizes:
+        inner *= s
+    out: List[Tuple[Tuple[int, ...], Tuple[str, ...]]] = []
     mp = model_parallelism
     while mp >= 1:
-        if num_devices % mp == 0:
-            shape = (num_devices // mp, mp)
-            if shape not in shapes:
-                shapes.append(shape)
+        denom = inner * mp
+        if denom and num_devices % denom == 0 and num_devices >= denom:
+            shape: Tuple[int, ...] = (num_devices // denom,) + inner_sizes
+            axes: Tuple[str, ...] = level_axes
+            if model_parallelism > 1:
+                shape = shape + (mp,)
+                axes = axes + ("model",)
+            if (shape, axes) not in out:
+                out.append((shape, axes))
         if mp == 1:
             break
         mp //= 2
-    return shapes
+    return out
+
+
+def pod_device_pool(num_pods: int, clients_per_pod: int,
+                    devices=None) -> np.ndarray:
+    """The host's devices as a ``(num_pods, clients_per_pod)`` object array.
+
+    Row p holds pod p's local devices — the assignment the full
+    ``{"pods": P, "clients": m}`` mesh factorizes over, and the unit of
+    loss when a pod drops: :func:`mesh_for_surviving_pods` rebuilds the
+    degraded mesh from the surviving rows.
+    """
+    devs = list(devices) if devices is not None else list(jax.devices())
+    need = num_pods * clients_per_pod
+    if len(devs) < need:
+        raise ValueError(
+            f"pod pool needs {need} devices ({num_pods} pods x "
+            f"{clients_per_pod} clients) but only {len(devs)} are available"
+        )
+    pool = np.empty((num_pods, clients_per_pod), dtype=object)
+    for i in range(num_pods):
+        for j in range(clients_per_pod):
+            pool[i, j] = devs[i * clients_per_pod + j]
+    return pool
+
+
+def mesh_for_surviving_pods(pool: np.ndarray, alive) -> jax.sharding.Mesh:
+    """Degraded ``(pod, data)`` mesh over the surviving pods of ``pool``.
+
+    ``alive`` is the ordered tuple of surviving pod ids (rows of ``pool``).
+    The mesh keeps the per-pod client dimension intact — a dropout removes
+    whole rows, never re-tiles within a pod — and goes through
+    :func:`repro.launch.mesh.mesh_for_placements`'s ``devices=`` subset
+    path so any N-level stack would factorize the same way.
+    """
+    from repro.launch.mesh import mesh_for_placements
+
+    alive = tuple(int(a) for a in alive)
+    if not alive:
+        raise ValueError("need at least one surviving pod to build a mesh")
+    sub = pool[list(alive), :]
+    return mesh_for_placements(
+        {"pods": sub.shape[0], "clients": sub.shape[1]},
+        devices=sub.reshape(-1),
+    )

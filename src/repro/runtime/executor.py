@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -636,6 +637,27 @@ class ElasticHierarchicalRound:
     traces — asserted in ``tests/test_executor.py``) and recompiles only the
     cross-pod leg.
 
+    ``step(..., mesh=...)`` makes the split PHYSICAL: pass the current
+    ``(pod, data)`` mesh (a degraded one after a dropout —
+    ``repro.runtime.elastic.mesh_for_surviving_pods``) and
+
+    * the server-side state (params + server state) is ``device_put``
+      onto the mesh replicated — on a mesh CHANGE this is the elastic
+      migration, counted in ``reshard_count`` / timed in
+      ``mesh_migrate_ms``;
+    * the stacked pod partials are ``device_put`` sharded over the mesh's
+      outermost (pod) axis before the cross-pod executable consumes them —
+      the simulated DCN hop;
+    * the cross-pod executable cache is keyed by ``(avals, mesh key)``
+      (device identity included), so each distinct surviving-pod mesh gets
+      exactly one executable (``meshes_seen`` counts them);
+    * the per-client leg stays pinned to ONE stable device for the whole
+      run: its executable was traced once with single-device inputs, and a
+      mesh-committed input would change the jit cache key and retrace it.
+      Physically this models the per-pod program being dispatched to each
+      pod's local slice unchanged — only the cross-pod reduction re-maps
+      when the mesh shrinks.
+
     ``client_fn(params, pod_data) -> pod partials`` must be a flat DrJAX
     program over ``clients_per_pod`` groups (``@drjax.program(partition_size
     =clients_per_pod)``); ``cross_fn(params, server_state, *stacked
@@ -659,6 +681,13 @@ class ElasticHierarchicalRound:
         self._client: Optional[CompiledPlan] = None
         self._client_out_tree = None
         self._cross_cache: Dict[Any, _CacheEntry] = {}
+        # physical-mesh state (step(..., mesh=...))
+        self._client_device = None  # stable home of the per-client leg
+        self._active_mesh = None
+        self._active_mesh_key = None
+        self._mesh_keys_seen: set = set()
+        self.reshard_count = 0
+        self.mesh_migrate_ms = 0.0
 
     # -- per-client leg ------------------------------------------------------
 
@@ -683,7 +712,10 @@ class ElasticHierarchicalRound:
     # -- cross-pod leg -------------------------------------------------------
 
     def _cross_leg(self, params, server_state, partials):
-        flat_key = _aval_key(jax.tree_util.tree_leaves((params, server_state, partials)))
+        flat_key = (
+            _aval_key(jax.tree_util.tree_leaves((params, server_state, partials))),
+            self._active_mesh_key,
+        )
         entry = self._cross_cache.get(flat_key)
         if entry is None:
             counter = TraceCounter()
@@ -697,18 +729,60 @@ class ElasticHierarchicalRound:
             self._cross_cache[flat_key] = entry
         return entry.fn(params, server_state, partials)
 
+    # -- physical mesh adoption ---------------------------------------------
+
+    def _adopt_mesh(self, mesh, params, server_state):
+        """Install ``mesh`` as the cross-pod leg's mesh; migrate state onto it.
+
+        Every physical step replicates the server-side state onto the active
+        mesh with ``device_put`` (a no-op view when it already lives there —
+        this is also what re-commits numpy state after a checkpoint restore
+        without splitting the executable cache). A transition between two
+        live meshes is a RESHARD — the pod-dropout/regrowth re-mapping — and
+        its state-migration wall time accumulates in ``mesh_migrate_ms``.
+        """
+        from repro.compat import shardings as _shardings
+
+        key = _mesh_key(mesh, None)
+        changed = key != self._active_mesh_key
+        t0 = time.perf_counter() if changed else 0.0
+        rep = _shardings.replicated_sharding(mesh)
+        params = jax.device_put(params, rep)
+        server_state = jax.device_put(server_state, rep)
+        if changed:
+            jax.block_until_ready((params, server_state))
+            self.mesh_migrate_ms += (time.perf_counter() - t0) * 1e3
+            if self._active_mesh_key is not None:
+                self.reshard_count += 1
+            self._active_mesh = mesh
+            self._active_mesh_key = key
+            self._mesh_keys_seen.add(key)
+        return params, server_state
+
     # -- driver --------------------------------------------------------------
 
-    def step(self, params, server_state, round_data):
+    def step(self, params, server_state, round_data, *, mesh=None):
         """One round: ``round_data`` leaves lead with (num_pods,
-        clients_per_pod, ...); the pod count may change between calls."""
+        clients_per_pod, ...); the pod count may change between calls.
+
+        With ``mesh`` (the physical path) the mesh may also change between
+        calls — the state migrates and only the cross-pod leg re-keys; see
+        the class docstring for the invariants.
+        """
         leaves = jax.tree_util.tree_leaves(round_data)
         if not leaves:
             raise ValueError("round_data must have at least one leaf")
         num_pods = leaves[0].shape[0]
+        if mesh is not None:
+            params, server_state = self._adopt_mesh(mesh, params, server_state)
+            if self._client_device is None:
+                self._client_device = jax.devices()[0]
+            client_params = jax.device_put(params, self._client_device)
+        else:
+            client_params = params
         pod_outs = [
             self._client_leg(
-                params,
+                client_params,
                 jax.tree_util.tree_map(lambda x: x[p], round_data),
             )
             for p in range(num_pods)
@@ -716,6 +790,21 @@ class ElasticHierarchicalRound:
         partials = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs), *pod_outs
         )
+        if mesh is not None:
+            from repro.compat import shardings as _shardings
+
+            # Ship the pod partials onto the mesh's outermost (pod) axis —
+            # the cross-DCN hop — so the cross-pod executable consumes them
+            # sharded one row per surviving pod.
+            pod_sharding = _shardings.named_sharding(
+                mesh, (mesh.axis_names[0],)
+            )
+            partials = jax.tree_util.tree_map(
+                lambda x: jax.device_put(x, pod_sharding)
+                if getattr(x, "ndim", 0) >= 1 and x.shape[0] == num_pods
+                else x,
+                partials,
+            )
         return self._cross_leg(params, server_state, partials)
 
     # -- introspection (tested invariants) -----------------------------------
@@ -727,3 +816,8 @@ class ElasticHierarchicalRound:
     @property
     def cross_compile_count(self) -> int:
         return len(self._cross_cache)
+
+    @property
+    def meshes_seen(self) -> int:
+        """Distinct physical meshes adopted so far (0 in logical mode)."""
+        return len(self._mesh_keys_seen)

@@ -70,6 +70,7 @@ def run_with_recovery(
     backoff_cap_s: float = 30.0,
     state_metadata: Optional[Callable[[Any], dict]] = None,
     on_restore: Optional[Callable[[Any, dict], Any]] = None,
+    on_recovery: Optional[Callable[[int, Optional[int]], None]] = None,
 ) -> Tuple[Any, dict]:
     """Run ``state = step_fn(step, state)`` for num_steps with restart-on-fail.
 
@@ -86,6 +87,11 @@ def run_with_recovery(
     stats keys: ``restarts``, ``scratch_restarts`` (restarts with no
     checkpoint to restore), ``completed_steps`` (unique forward progress,
     replays excluded), ``replayed_steps``, ``backoff_s``.
+
+    ``on_recovery(restart_index, restored_step_or_None)`` fires after every
+    recovery restore (1-indexed restart counter; ``None`` means a
+    from-scratch restart) — the observation point chaos harnesses use to
+    audit which checkpoint each failure actually fell back to.
     """
     stats = {
         "restarts": 0,
@@ -138,9 +144,13 @@ def run_with_recovery(
                 # replayed prefix is not new progress.
                 state, step = init_state, 0
                 stats["scratch_restarts"] += 1
+                if on_recovery is not None:
+                    on_recovery(restarts, None)
             else:
                 step, state, meta = restored
                 if on_restore is not None:
                     state = on_restore(state, meta)
+                if on_recovery is not None:
+                    on_recovery(restarts, step)
     checkpoint_mgr.wait()
     return state, stats

@@ -348,6 +348,24 @@ class TestRetrace:
         assert analysis.explain_fingerprint_mismatch(
             pa, _captured_scalar_plan(0.1)) == []
 
+    def test_mesh_keyed_leg_warns_on_donated_multilevel_plan(self):
+        """A donated executable spanning >= 2 replica levels is keyed by a
+        mesh elastic events can change — flagged, pointing at the elastic
+        split."""
+        plan, _ = nested_plan()
+        report = plan.analyze(donate_argnums=(0,))
+        warns = report.by_code("retrace/mesh-keyed-leg")
+        assert len(warns) == 1
+        assert warns[0].severity == "warning"
+        assert "elastic" in warns[0].message
+        # no donation -> no hazard (nothing pins the old mesh's buffers)
+        assert not plan.analyze().by_code("retrace/mesh-keyed-leg")
+        # flat single-level plan: elasticity never re-keys its mesh
+        fplan, _ = flat_plan()
+        assert not fplan.analyze(donate_argnums=(0,)).by_code(
+            "retrace/mesh-keyed-leg"
+        )
+
     def test_fingerprint_parts_define_the_fingerprint(self):
         """The decomposition must reproduce plan_fingerprint's exact byte
         stream (the executable cache keys on it)."""

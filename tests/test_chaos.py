@@ -80,9 +80,28 @@ class TestSchedule:
         assert s.ckpt_faults  # seed 1 schedules one
         for step, kind in s.ckpt_faults.items():
             assert step % 4 == 0 and step >= 4
-            assert kind in ("torn", "corrupt")
+            assert kind in ("torn", "corrupt") or kind.startswith("kill@")
             # the fault breaks the checkpoint some failure wants to restore
             assert any((r // 4) * 4 == step for r in s.failure_rounds)
+        # the cycle leads with a mid-write kill: the first fault of every
+        # schedule exercises the crash-consistency path
+        first = s.ckpt_faults[min(s.ckpt_faults)]
+        assert first.startswith("kill@")
+
+    def test_alive_pods_track_pod_counts(self):
+        s = ChaosSchedule.from_config(
+            ChaosConfig(rounds=48, num_elastic_events=6, serve_traffic=False)
+        )
+        assert len(s.alive_pods) == 48
+        for r, alive in enumerate(s.alive_pods):
+            assert len(alive) == s.pod_counts[r]
+            assert alive == tuple(sorted(alive))
+            assert all(0 <= a < 4 for a in alive)
+        # deterministic rebuild picks the same victims
+        s2 = ChaosSchedule.from_config(
+            ChaosConfig(rounds=48, num_elastic_events=6, serve_traffic=False)
+        )
+        assert s.alive_pods == s2.alive_pods
 
     def test_config_validation(self):
         with pytest.raises(ValueError, match="rounds"):
@@ -157,6 +176,108 @@ class TestFullSoak:
         assert rep.serve["completed"] == rep.serve["requests"]
         assert rep.serve["faults_injected"] == 1
         assert rep.serve["recoveries"] >= 1
+
+
+class TestPhysicalMesh:
+    @pytest.mark.slow
+    def test_soak_reshards_real_mesh(self, device_pool):
+        """Acceptance soak on the device-pool worker: pod dropout rebuilds a
+        degraded (pod, data) mesh from surviving devices. >= 1 real dropout
+        reshard and >= 1 regrowth, final state bitwise-equal to the
+        uninterrupted oracle, zero per-client-leg retraces, exactly one
+        cross-pod executable per distinct mesh."""
+        out = device_pool.run(
+            f"""
+            import json
+            import jax
+            from repro.runtime.chaos import ChaosConfig, run_chaos_soak
+
+            cfg = ChaosConfig(
+                rounds=20, seed=1,
+                num_pods=jax.device_count() // 2, clients_per_pod=2,
+                num_device_failures=1, num_elastic_events=2,
+                num_ckpt_faults=1, checkpoint_every=4, audit_every=8,
+                serve_traffic=False, physical_mesh=True,
+            )
+            rep = run_chaos_soak(cfg, check=False)
+            drops = sum(1 for (_, o, n) in rep.elastic_events if n < o)
+            grows = sum(1 for (_, o, n) in rep.elastic_events if n > o)
+            print(json.dumps({{
+                "bitwise": rep.oracle_bitwise_equal,
+                "client_retraces": rep.client_retraces,
+                "oracle_extra": rep.oracle_extra_traces,
+                "reshards": rep.reshards,
+                "meshes_seen": rep.meshes_seen,
+                "cross_compiles": rep.cross_compiles,
+                "migrate_ms": rep.mesh_migrate_ms,
+                "drops": drops, "grows": grows,
+                "kills": rep.mid_write_kills_injected,
+                "kills_survived": rep.mid_write_kills_survived,
+                "audit_err": rep.audit["max_rel_err"],
+            }}))
+            """
+        )
+        assert out["bitwise"], "physical soak diverged from same-mesh oracle"
+        assert out["client_retraces"] == 0
+        assert out["oracle_extra"] == 0
+        assert out["drops"] >= 1 and out["grows"] >= 1
+        assert out["reshards"] >= out["drops"] + out["grows"]
+        assert out["cross_compiles"] == out["meshes_seen"] >= 2
+        assert out["migrate_ms"] > 0
+        assert out["kills"] >= 1
+        assert out["kills_survived"] == out["kills"]
+        assert out["audit_err"] < 1e-4
+
+
+class TestTimeBudget:
+    def test_scale_config_to_minutes_pure(self):
+        from repro.runtime.chaos import scale_config_to_minutes
+
+        cfg = ChaosConfig(rounds=48, num_device_failures=2,
+                          num_elastic_events=4, num_ckpt_faults=2,
+                          minutes=2.0)
+        # 0.5 s/round, 2 min budget -> 240 rounds, faults scale 5x
+        scaled = scale_config_to_minutes(cfg, 0.5)
+        assert scaled.rounds == 240
+        assert scaled.num_device_failures == 10
+        assert scaled.num_elastic_events == 20
+        assert scaled.num_ckpt_faults == 10
+        assert scaled.max_restarts > scaled.num_device_failures
+        assert scaled.minutes is None  # scaling never re-triggers
+        # tiny budget floors at the minimum soak length, faults floor at 1
+        tiny = scale_config_to_minutes(
+            dataclasses.replace(cfg, minutes=0.001), 10.0
+        )
+        assert tiny.rounds == 8
+        assert tiny.num_device_failures >= 1
+        assert tiny.num_ckpt_faults >= 1
+        # no budget -> untouched
+        assert scale_config_to_minutes(
+            dataclasses.replace(cfg, minutes=None), 0.5
+        ) == dataclasses.replace(cfg, minutes=None)
+        scaled.validate()
+
+    def test_minutes_budget_drives_soak_length(self, monkeypatch):
+        import repro.runtime.chaos as chaos_mod
+
+        # fake calibration: 0.1 s/round, 0.02 min = 1.2 s -> 12 rounds
+        monkeypatch.setattr(chaos_mod, "_calibrate_round_s", lambda fn: 0.1)
+        rep = run_chaos_soak(_smoke_cfg(minutes=0.02), check=False)
+        assert rep.rounds == 12
+        assert rep.minutes_budget == 0.02
+        assert rep.completed_steps == 12
+
+    def test_calibration_runs_probe_round(self):
+        from repro.runtime.chaos import _calibrate_round_s
+
+        calls = {"n": 0}
+
+        def probe():
+            calls["n"] += 1
+
+        s = _calibrate_round_s(probe)
+        assert calls["n"] == 3  # warmup + 2 timed
+        assert s > 0
 
 
 class TestMaskedElasticRound:

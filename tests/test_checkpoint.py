@@ -196,3 +196,171 @@ class TestChaosFaultInjection:
         mgr.save(1, _tree())
         with pytest.raises(ValueError, match="unknown checkpoint fault"):
             mgr.inject_fault(1, "gamma-ray")
+
+
+def _npz_bytes(directory, step):
+    return os.path.getsize(
+        os.path.join(directory, f"step_{step:09d}", "arrays.npz")
+    )
+
+
+class TestMidWriteKills:
+    """A writer killed at ANY byte offset must leave the previous committed
+    step restorable — the crash-consistency contract (temp dir + fsync +
+    atomic rename + LATEST-last)."""
+
+    def test_kill_offset_sweep_deterministic(self, tmp_path):
+        t1, t2 = _tree(1), _tree(2)
+        probe = CheckpointManager(str(tmp_path / "probe"))
+        probe.save(1, t1)
+        npz = _npz_bytes(str(tmp_path / "probe"), 1)
+        # manifest written / npz half-written / pre-rename /
+        # post-rename-pre-LATEST, plus the stream boundaries
+        offsets = [0, 1, npz // 2, npz, npz + 10, npz + 10_000_000,
+                   "pre-rename", "pre-latest"]
+        for i, off in enumerate(offsets):
+            d = str(tmp_path / f"kill_{i}")
+            mgr = CheckpointManager(d)
+            mgr.save(1, t1)
+            mgr.kill_writer_at_byte(off)
+            mgr.save(2, t2)  # writer "dies" — no error may surface
+            assert mgr.killed_writes.get(2), f"offset {off!r}: kill not recorded"
+            assert mgr.latest_step() == 1, f"offset {off!r}"
+            step, restored, _ = mgr.restore_latest(t1)
+            assert step == 1, f"offset {off!r}: restored step {step}"
+            np.testing.assert_array_equal(
+                np.asarray(restored["w"]), np.asarray(t1["w"])
+            )
+            # recovery replay: the clean re-save commits and becomes latest
+            mgr.save(2, t2)
+            step, restored, _ = mgr.restore_latest(t1)
+            assert step == 2
+            np.testing.assert_array_equal(
+                np.asarray(restored["w"]), np.asarray(t2["w"])
+            )
+
+    def test_async_kill_is_silent(self, tmp_path):
+        """A killed async writer surfaces NO write error (a dead process
+        reports nothing) but is recorded in killed_writes."""
+        mgr = CheckpointManager(str(tmp_path))
+        t = _tree()
+        mgr.save(1, t)
+        mgr.kill_writer_at_byte(64)
+        mgr.save(2, t, blocking=False)
+        mgr.wait()  # must not raise
+        assert 2 in mgr.killed_writes
+        assert mgr._write_error is None
+        step, _, _ = mgr.restore_latest(t)
+        assert step == 1
+
+    def test_pre_latest_kill_leaves_uncommitted_dir_invisible(self, tmp_path):
+        """Killed after the rename but before LATEST: the step dir is on
+        disk and complete, but was never acknowledged — restore must not
+        resume from it."""
+        mgr = CheckpointManager(str(tmp_path))
+        t1, t2 = _tree(1), _tree(2)
+        mgr.save(1, t1)
+        mgr.kill_writer_at_byte("pre-latest")
+        mgr.save(2, t2)
+        assert sorted(mgr._complete_steps()) == [1, 2]  # dir exists...
+        assert mgr.latest_step() == 1  # ...but is uncommitted
+        step, _, _ = mgr.restore_latest(t1)
+        assert step == 1
+
+    def test_kill_via_fault_hook_spec(self, tmp_path):
+        """fault_hook may return 'kill@<bytes>' specs — the chaos schedule's
+        interface to mid-write kills."""
+        mgr = CheckpointManager(
+            str(tmp_path),
+            fault_hook=lambda step: "kill@128" if step == 2 else None,
+        )
+        t = _tree()
+        mgr.save(1, t)
+        mgr.save(2, t)
+        assert 2 in mgr.killed_writes
+        step, _, _ = mgr.restore_latest(t)
+        assert step == 1
+
+    def test_kill_before_any_commit_restores_none(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.kill_writer_at_byte(0)
+        mgr.save(1, _tree())
+        assert mgr.restore_latest(_tree()) is None
+
+    def test_malformed_kill_spec_raises(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        with pytest.raises(ValueError, match="unknown checkpoint fault"):
+            mgr.kill_writer_at_byte("kill@sometime")
+        with pytest.raises(ValueError, match=">= 0"):
+            mgr.kill_writer_at_byte(-1)
+
+    def test_kill_offset_sweep_hypothesis(self):
+        """Opt-in property variant: EVERY offset in [0, stream end + slack]
+        must be survivable (runs only when hypothesis is installed)."""
+        import tempfile
+
+        from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+        t1, t2 = _tree(1), _tree(2)
+        with tempfile.TemporaryDirectory() as probe_dir:
+            probe = CheckpointManager(probe_dir)
+            probe.save(1, t1)
+            hi = _npz_bytes(probe_dir, 1) + 4096
+
+        @given(st.integers(min_value=0, max_value=hi))
+        @settings(max_examples=25, deadline=None)
+        def check(offset):
+            with tempfile.TemporaryDirectory() as d:
+                mgr = CheckpointManager(d)
+                mgr.save(1, t1)
+                mgr.kill_writer_at_byte(offset)
+                mgr.save(2, t2)
+                assert 2 in mgr.killed_writes
+                step, restored, _ = mgr.restore_latest(t1)
+                assert step == 1
+                np.testing.assert_array_equal(
+                    np.asarray(restored["w"]), np.asarray(t1["w"])
+                )
+
+        if not HAVE_HYPOTHESIS:
+            pytest.skip("hypothesis not installed")
+        check()
+
+
+class TestGCKeepsLastGood:
+    def test_gc_never_deletes_newest_complete_under_faulted_tail(
+        self, tmp_path
+    ):
+        """Regression: corrupt step dirs are 'complete' (manifest present)
+        and used to count toward keep_last_n, so a run of faulted writes
+        could evict the only restorable checkpoint."""
+        mgr = CheckpointManager(
+            str(tmp_path), keep_last_n=1,
+            fault_hook=lambda step: "corrupt" if step > 1 else None,
+        )
+        t = _tree()
+        mgr.save(1, t)
+        mgr.save(2, t)  # corrupt — complete but unverifiable
+        mgr.save(3, t)  # corrupt — with the old _gc this evicted step 1
+        assert 1 in mgr._complete_steps()
+        step, _, _ = mgr.restore_latest(t)
+        assert step == 1
+
+    def test_gc_still_prunes_old_clean_steps(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_last_n=2)
+        t = _tree()
+        for s in (1, 2, 3, 4):
+            mgr.save(s, t)
+        assert sorted(mgr._complete_steps()) == [3, 4]
+
+    def test_gc_keeps_latest_target_after_killed_writes(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_last_n=1)
+        t = _tree()
+        mgr.save(1, t)
+        for s in (2, 3):
+            mgr.kill_writer_at_byte("pre-latest")
+            mgr.save(s, t)  # dirs land but never commit
+        # a follow-up clean save GCs; the committed step-1 must survive any
+        # intermediate state where uncommitted dirs outnumber the budget
+        step, _, _ = mgr.restore_latest(t)
+        assert step == 1

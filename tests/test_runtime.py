@@ -268,6 +268,36 @@ class TestElastic:
         # a pool that only fits fully-data-parallel
         assert available_mesh_shapes(7, 4) == [(7, 1)]
 
+    def test_available_mesh_shapes_placement_stack(self):
+        """N-level form: inner levels keep their sizes, the OUTERMOST level
+        absorbs the degraded pool, axis names come from
+        launch.mesh.level_axes_for."""
+        from repro.runtime.elastic import available_mesh_shapes
+
+        # full 8-device (pods, clients) pool, one pod lost (6 devices left)
+        shapes = available_mesh_shapes(
+            6, placements={"pods": 4, "clients": 2}
+        )
+        assert shapes == [((3, 2), ("pod", "data"))]
+        # model parallelism appends the "model" axis, halved fallbacks too
+        shapes = available_mesh_shapes(
+            16, 4, placements={"pods": 4, "clients": 2}
+        )
+        assert shapes == [
+            ((2, 2, 4), ("pod", "data", "model")),
+            ((4, 2, 2), ("pod", "data", "model")),
+            ((8, 2, 1), ("pod", "data", "model")),
+        ]
+        # 3-level superpod stack: only the outermost (superpod) level scales
+        shapes = available_mesh_shapes(
+            12, placements={"superpods": 2, "pods": 3, "clients": 2}
+        )
+        assert shapes == [((2, 3, 2), ("superpod", "pod", "data"))]
+        # a pool the inner levels can't tile yields no shapes
+        assert available_mesh_shapes(
+            5, placements={"pods": 4, "clients": 2}
+        ) == []
+
     def test_rescale_shrink_and_grow(self):
         data = {"tokens": np.arange(8 * 3).reshape(8, 3)}
         small = rescale_partition(data, 8, 4)
